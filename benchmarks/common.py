@@ -1,0 +1,59 @@
+"""Shared benchmark harness utilities."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.models import lm
+from repro.train.train_step import make_train_step
+
+
+def timeit(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (CPU; relative numbers)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def bench_cfg(d_model=128, n_layers=2, vocab=512, d_ff=384) -> ArchConfig:
+    """The paper's Llama-2-like ablation family at CPU scale."""
+    import dataclasses
+    base = registry.get("llama_200m")
+    return dataclasses.replace(
+        base, name="llama-bench", n_layers=n_layers, d_model=d_model,
+        n_heads=4, n_kv_heads=4, d_ff=d_ff, vocab=vocab, head_dim=32)
+
+
+def train_curve(scheme: str, *, steps: int, cfg=None, seq=64, batch=8,
+                lr=2e-3, seed=0, eval_every=0):
+    """Train the bench model under `scheme`; return final eval loss over a
+    held-out split (deterministic across schemes: same data, same init)."""
+    cfg = cfg or bench_cfg()
+    corpus = SyntheticCorpus(DataConfig(vocab=cfg.vocab, seq_len=seq,
+                                        global_batch=batch, seed=seed))
+    init_state, train_step = make_train_step(
+        cfg, scheme, base_lr=lr, total_steps=steps, base_seed=seed,
+        weight_decay=0.1)
+    step_j = jax.jit(train_step)
+    state = init_state(lm.init(cfg, jax.random.PRNGKey(seed)))
+    for i in range(steps):
+        state, m = step_j(state, corpus.batch_at(i))
+    # held-out eval: batches the training never saw (step offset 10^6)
+    eval_losses = []
+    eseed = jnp.array([9, 9], jnp.uint32)
+    for j in range(4):
+        b = corpus.batch_at(1_000_000 + j)
+        eval_losses.append(float(lm.lm_loss(state.params, cfg, b, scheme, eseed)))
+    return float(np.mean(eval_losses))

@@ -1,0 +1,26 @@
+"""Paper Fig. 1: C4-val-loss impact of selectively quantizing the backward
+GEMMs, at CPU scale (same Llama-like family, synthetic corpus, identical
+init/data across schemes). Expected ordering (paper Sec. 6.1): MS-EDEN (e)
+with weight re-quantization beats SR (d) without it; every MS-EDEN variant
+beats the matching SR variant."""
+
+from __future__ import annotations
+
+from benchmarks.common import train_curve
+
+SCHEMES = ["bf16", "abl_a_sr", "abl_a_ms_eden", "abl_b_sr", "abl_c_sr",
+           "abl_c_ms_eden", "abl_d_sr", "abl_e_sr", "abl_e_ms_eden"]
+
+
+def run(quick: bool = True):
+    steps = 120 if quick else 600
+    rows = []
+    base = None
+    for scheme in SCHEMES:
+        loss = train_curve(scheme, steps=steps)
+        if scheme == "bf16":
+            base = loss
+        gap = loss - base
+        rows.append((f"fig1/{scheme}", 0.0,
+                     f"val_loss={loss:.4f} gap_vs_bf16={gap:+.4f}"))
+    return rows

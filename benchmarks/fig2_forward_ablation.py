@@ -1,0 +1,22 @@
+"""Paper Fig. 2: forward-pass-only quantization — native 1x16 scales vs
+square 16x16 blocks, each with/without 4/6. Expected (paper Sec. 6.1):
+4/6 helps native scales ~2x more than square blocks; square blocks trail."""
+
+from __future__ import annotations
+
+from benchmarks.common import train_curve
+
+SCHEMES = ["bf16", "fwd_rtn_1x16", "fwd_rtn_1x16_fos", "fwd_square",
+           "fwd_square_fos"]
+
+
+def run(quick: bool = True):
+    steps = 120 if quick else 600
+    rows, base = [], None
+    for scheme in SCHEMES:
+        loss = train_curve(scheme, steps=steps)
+        if scheme == "bf16":
+            base = loss
+        rows.append((f"fig2/{scheme}", 0.0,
+                     f"val_loss={loss:.4f} gap_vs_bf16={loss - base:+.4f}"))
+    return rows

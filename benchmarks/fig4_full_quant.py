@@ -1,0 +1,28 @@
+"""Paper Fig. 4: fully-quantized (forward + backward) recipes vs BF16.
+Expected: Quartet II has the smallest loss gap, >=20% below the baselines
+(NVIDIA / TetraJet-v2 / FourOverSix)."""
+
+from __future__ import annotations
+
+from benchmarks.common import train_curve
+
+SCHEMES = ["bf16", "nvidia", "tetrajet_v2", "four_over_six", "quartet2"]
+
+
+def run(quick: bool = True):
+    steps = 150 if quick else 800
+    rows, base = [], None
+    gaps = {}
+    for scheme in SCHEMES:
+        loss = train_curve(scheme, steps=steps)
+        if scheme == "bf16":
+            base = loss
+        gaps[scheme] = loss - base
+        rows.append((f"fig4/{scheme}", 0.0,
+                     f"val_loss={loss:.4f} gap_vs_bf16={loss - base:+.4f}"))
+    others = [v for k, v in gaps.items() if k not in ("bf16", "quartet2")]
+    if others:
+        rel = (min(others) - gaps["quartet2"]) / max(min(others), 1e-9)
+        rows.append(("fig4/quartet2_improvement_vs_best_baseline", 0.0,
+                     f"gap_reduction={rel:+.1%} (paper: >=20%)"))
+    return rows

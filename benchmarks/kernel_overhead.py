@@ -1,0 +1,40 @@
+"""Paper Fig. 6 / Table 7 analogue. No TPU wall-clock exists in this
+container, so we report (a) interpret-mode relative cost of quantization vs
+matmul on identical tiles (the paper's hollow-vs-filled gap), and (b) the
+analytic HBM-traffic ratio NVFP4/bf16 that governs the TPU speedup —
+activations and gradients move 4.5 bits instead of 16."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+from repro.core import quant as Q
+from repro.core import ms_eden as ME
+
+
+def run(quick: bool = True):
+    m = 512 if quick else 2048
+    k, n = 1024, 1024
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (n, k), jnp.bfloat16)
+
+    mm = jax.jit(lambda a, b: (a @ b.T).astype(jnp.bfloat16))
+    t_mm = timeit(mm, x, w, iters=3)
+    qf = jax.jit(lambda a: Q.dequant(Q.quant_four_over_six(a), jnp.bfloat16))
+    t_q = timeit(qf, x, iters=3)
+    me = jax.jit(lambda a: ME.ms_eden(a.astype(jnp.float32),
+                                      jax.random.PRNGKey(2),
+                                      jax.random.PRNGKey(3)).qt.codes)
+    t_me = timeit(me, x, iters=3)
+
+    bits_bf16 = 16.0
+    bits_nvfp4 = 4 + 8 / 16 + 32 / (m * k)
+    return [
+        ("kernel/matmul_us", t_mm, f"tile={m}x{k}x{n}"),
+        ("kernel/fos_quant_us", t_q, f"overhead_vs_mm={t_q / t_mm:.2f}x (CPU proxy)"),
+        ("kernel/ms_eden_us", t_me, f"overhead_vs_mm={t_me / t_mm:.2f}x (CPU proxy)"),
+        ("kernel/hbm_bits_per_elem", 0.0,
+         f"bf16={bits_bf16} nvfp4={bits_nvfp4:.2f} traffic_ratio={bits_nvfp4 / bits_bf16:.3f}"),
+    ]

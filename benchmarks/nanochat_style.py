@@ -1,0 +1,44 @@
+"""Paper Sec. 6.2 / Table 5 analogue: the nanochat-style recipe — Muon
+optimizer, WSD schedule, QK-norm, ReLU^2 MLP — at CPU scale, comparing
+BF16 / NVIDIA / 4:6 / TetraJet-v2 / Quartet II pre-training loss gaps."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_cfg
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.models import lm
+from repro.train.train_step import make_train_step
+
+SCHEMES = ["bf16", "nvidia", "four_over_six", "tetrajet_v2", "quartet2"]
+
+
+def run(quick: bool = True):
+    steps = 120 if quick else 600
+    cfg = dataclasses.replace(bench_cfg(), qk_norm=True, mlp="relu2",
+                              name="nanochat-bench")
+    rows, base = [], None
+    for scheme in SCHEMES:
+        corpus = SyntheticCorpus(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                            global_batch=8, seed=11))
+        init_state, train_step = make_train_step(
+            cfg, scheme, optimizer="muon", schedule="wsd", base_lr=2e-3,
+            total_steps=steps, base_seed=11)
+        stepj = jax.jit(train_step)
+        state = init_state(lm.init(cfg, jax.random.PRNGKey(11)))
+        for i in range(steps):
+            state, m = stepj(state, corpus.batch_at(i))
+        evals = [float(lm.lm_loss(state.params, cfg, corpus.batch_at(10**6 + j),
+                                  scheme, jnp.array([9, 9], jnp.uint32)))
+                 for j in range(4)]
+        loss = float(np.mean(evals))
+        if scheme == "bf16":
+            base = loss
+        rows.append((f"nanochat/{scheme}", 0.0,
+                     f"val_loss={loss:.4f} gap={loss - base:+.4f}"))
+    return rows

@@ -1,0 +1,26 @@
+"""End-to-end recipe comparison (paper Fig. 4 in miniature): same data, same
+init, different quantization schemes; prints the loss-gap leaderboard.
+
+    PYTHONPATH=src python examples/compare_schemes.py [--steps 150]
+"""
+
+import argparse
+
+from benchmarks.common import train_curve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    args = ap.parse_args()
+    losses = {}
+    for scheme in ("bf16", "nvidia", "tetrajet_v2", "four_over_six", "quartet2"):
+        losses[scheme] = train_curve(scheme, steps=args.steps)
+        gap = losses[scheme] - losses["bf16"]
+        print(f"{scheme:16s} val_loss={losses[scheme]:.4f} gap={gap:+.4f}")
+    ranked = sorted(losses, key=losses.get)
+    print("\nleaderboard:", " < ".join(ranked))
+
+
+if __name__ == "__main__":
+    main()

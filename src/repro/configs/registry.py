@@ -1,0 +1,34 @@
+"""Architecture registry: `get("yi-9b")`, `names()`."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig
+
+ARCH_IDS = [
+    "whisper_tiny",
+    "chatglm3_6b",
+    "nemotron_4_15b",
+    "granite_8b",
+    "yi_9b",
+    "deepseek_moe_16b",
+    "deepseek_v3_671b",
+    "llava_next_mistral_7b",
+    "rwkv6_7b",
+    "recurrentgemma_9b",
+    "llama_200m",  # the paper's own ablation family (Table 3)
+]
+
+
+def _norm(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    return mod.CONFIG
+
+
+def names() -> list[str]:
+    return list(ARCH_IDS)

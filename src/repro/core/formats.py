@@ -1,0 +1,213 @@
+"""Numeric formats for NVFP4 micro-scaled quantization.
+
+NVFP4 represents a tensor as
+  - FP4 E2M1 element codes (grid {0, .5, 1, 1.5, 2, 3, 4, 6} x sign),
+  - one FP8 E4M3 scale per group of 16 contiguous inner-dim elements,
+  - one FP32 scale per tensor.
+
+This module provides the scalar format primitives shared by every quantizer:
+E2M1 encode/decode (RTN and stochastic), E4M3 round-to-nearest and stochastic
+rounding via uint8 bit manipulation, the E8M3 extended-range pseudo-scale proxy
+(paper Section 7, represented in bf16), and 4-bit code (un)packing.
+
+Everything is pure jnp and dtype-exact: values produced here are bit-exactly
+representable in the target formats, so the simulated-NVFP4 GEMMs on the bf16
+MXU see exactly the numbers a Blackwell FP4 tensor core would.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# E2M1 (FP4) grid
+# --------------------------------------------------------------------------
+
+# Non-negative representable magnitudes of E2M1, ascending.
+FP4_GRID = np.asarray([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=np.float32)
+FP4_MAX = 6.0
+# Midpoints between adjacent grid magnitudes (round-to-nearest-even thresholds;
+# E2M1 ties round to even mantissa, i.e. 0.25->0.5? No: tie at 0.25 rounds to
+# 0.0 (even). We implement round-half-to-even per the IEEE-style rule used by
+# hardware casts).
+_FP4_MID = (FP4_GRID[:-1] + FP4_GRID[1:]) / 2.0  # [.25, .75, 1.25, 1.75, 2.5, 3.5, 5]
+# grid index parity: even-mantissa grid points win ties.
+# index:      0    1    2    3    4    5    6    7
+# value:      0   .5    1  1.5    2    3    4    6
+# mantissa:   0    1    0    1    0    1    0    1   (M1 bit)
+_FP4_EVEN = np.asarray([True, False, True, False, True, False, True, False])
+
+# E4M3 (float8_e4m3fn) constants
+FP8_MAX = 448.0
+# Largest relative increase RTN_FP8 can apply to a positive value: for e4m3 the
+# mantissa step is 2^-3, so the worst case is rounding up from just above a
+# power of two: x -> x * (1 + 1/16) at most, hence the paper's 16/17 margin.
+FP8_RTN_MARGIN = 16.0 / 17.0
+
+GROUP = 16  # NVFP4 micro-scaling group size
+RHT_BLOCK = 128  # rotation block size (paper App. A: d=128)
+
+
+def fp4_rtn(x: jax.Array) -> jax.Array:
+    """Round-to-nearest(-even) onto the E2M1 grid. Values beyond +-6 clip.
+
+    Pure arithmetic (nested selects, round-half-even thresholds baked in):
+    no searchsorted/argmin/int32 intermediates — this is the training
+    hot path, executed on every GEMM operand (Perf iteration 2,
+    EXPERIMENTS.md §Perf).
+    """
+    xf = x.astype(jnp.float32)
+    m = jnp.abs(xf)
+    q = jnp.where(m <= 0.25, 0.0,
+        jnp.where(m < 0.75, 0.5,
+        jnp.where(m <= 1.25, 1.0,
+        jnp.where(m < 1.75, 1.5,
+        jnp.where(m <= 2.5, 2.0,
+        jnp.where(m < 3.5, 3.0,
+        jnp.where(m <= 5.0, 4.0, 6.0)))))))
+    return jnp.sign(xf) * q
+
+
+def fp4_code(x: jax.Array) -> jax.Array:
+    """Encode FP4-grid values into 4-bit codes (uint8 in [0,15]).
+
+    Layout: bit3 = sign, bits2..0 = grid index. Assumes x already on grid.
+    """
+    xf = x.astype(jnp.float32)
+    m = jnp.abs(xf)
+    idx = (jnp.where(m < 0.25, 0,
+           jnp.where(m < 0.75, 1,
+           jnp.where(m < 1.25, 2,
+           jnp.where(m < 1.75, 3,
+           jnp.where(m < 2.5, 4,
+           jnp.where(m < 3.5, 5,
+           jnp.where(m < 5.0, 6, 7)))))))).astype(jnp.uint8)
+    sign = (xf < 0).astype(jnp.uint8)
+    return (sign << 3) | idx
+
+
+def fp4_decode(code: jax.Array) -> jax.Array:
+    """Decode 4-bit codes back to float32 grid values."""
+    grid = jnp.asarray(FP4_GRID)
+    idx = (code & 0x7).astype(jnp.int32)
+    sign = jnp.where((code >> 3) & 1, -1.0, 1.0)
+    return sign * grid[idx]
+
+
+def fp4_sr(x: jax.Array, key: jax.Array) -> jax.Array:
+    """Stochastic rounding onto the E2M1 grid (unbiased for |x| <= 6).
+
+    P(round up) = (x - lo) / (hi - lo). Values beyond the grid edge clip
+    (callers choose scales so this does not occur, preserving unbiasedness).
+    """
+    xf = x.astype(jnp.float32)
+    mag = jnp.clip(jnp.abs(xf), 0.0, FP4_MAX)
+    grid = jnp.asarray(FP4_GRID)
+    # lo index: largest grid point <= mag
+    idx_lo = jnp.clip(jnp.searchsorted(grid, mag, side="right") - 1, 0, 7)
+    idx_hi = jnp.clip(idx_lo + 1, 0, 7)
+    lo = grid[idx_lo]
+    hi = grid[idx_hi]
+    span = jnp.maximum(hi - lo, 1e-30)
+    p_up = jnp.clip((mag - lo) / span, 0.0, 1.0)
+    u = jax.random.uniform(key, shape=xf.shape, dtype=jnp.float32)
+    q = jnp.where(u < p_up, hi, lo)
+    return jnp.sign(xf) * q
+
+
+# --------------------------------------------------------------------------
+# E4M3 (float8_e4m3fn)
+# --------------------------------------------------------------------------
+
+def fp8_rtn(x: jax.Array) -> jax.Array:
+    """Round-to-nearest-even to float8_e4m3fn, returned as float32.
+
+    Saturates at +-448 (e4m3fn has no inf; casting overflow yields NaN, so we
+    clip first, matching hardware saturating converts).
+    """
+    xf = jnp.clip(x.astype(jnp.float32), -FP8_MAX, FP8_MAX)
+    return xf.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+
+
+def _fp8_bits(x8: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(x8, jnp.uint8)
+
+
+def _bits_fp8(u8: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(u8, jnp.float8_e4m3fn)
+
+
+def fp8_sr_pos(x: jax.Array, key: jax.Array) -> jax.Array:
+    """Stochastic rounding of NON-NEGATIVE values to float8_e4m3fn (as f32).
+
+    Used for merging EDEN correction factors into group scales (Alg. 1 last
+    loop). Implementation walks the e4m3 lattice via uint8 bit arithmetic:
+    for positive e4m3fn, adjacent representable values differ by +-1 ulp in
+    the bit pattern (0x00=0 ... 0x7E=448; 0x7F=NaN).
+
+    Subnormal underflow: the paper (App. A, item 3) skips SR on underflowing
+    scales; values below the smallest subnormal round deterministically via
+    RTN, matching that simplification.
+    """
+    xf = jnp.clip(x.astype(jnp.float32), 0.0, FP8_MAX)
+    near = xf.astype(jnp.float8_e4m3fn)           # RNE neighbour
+    near_f = near.astype(jnp.float32)
+    bits = _fp8_bits(near)
+    # Other neighbour: one ulp toward x.
+    up_bits = jnp.minimum(bits + 1, jnp.uint8(0x7E))
+    down_bits = jnp.where(bits > 0, bits - 1, jnp.uint8(0))
+    other_bits = jnp.where(near_f < xf, up_bits, down_bits)
+    other_f = _bits_fp8(other_bits).astype(jnp.float32)
+    lo = jnp.minimum(near_f, other_f)
+    hi = jnp.maximum(near_f, other_f)
+    span = hi - lo
+    p_up = jnp.where(span > 0, (xf - lo) / jnp.maximum(span, 1e-30), 0.0)
+    p_up = jnp.clip(p_up, 0.0, 1.0)
+    u = jax.random.uniform(key, shape=xf.shape, dtype=jnp.float32)
+    out = jnp.where(u < p_up, hi, lo)
+    # exactly representable -> keep
+    return jnp.where(near_f == xf, near_f, out)
+
+
+# --------------------------------------------------------------------------
+# E8M3: extended-range FP8 proxy (paper Section 7), emulated in bf16.
+# Same 3 mantissa bits as e4m3 but full 8-bit exponent range -> never
+# overflows for pseudo-scales computed before global range alignment.
+# --------------------------------------------------------------------------
+
+def e8m3_rtn(x: jax.Array) -> jax.Array:
+    """Round positive values to 3 mantissa bits with unbounded exponent.
+
+    This is the ER-NVFP4 pseudo-scale format: bf16-representable (bf16 has
+    7 mantissa bits >= 3, and 8 exponent bits), so storing the result in bf16
+    is exact — exactly the paper's 'E8M3 represented in BF16'.
+    """
+    xf = x.astype(jnp.float32)
+    m, e = jnp.frexp(jnp.maximum(xf, 1e-38))
+    # m in [0.5, 1); quantize m to 4 bits after the point (1+3 mantissa bits
+    # once renormalized: m = 0.1xxx_2): step 2^-4.
+    mq = jnp.round(m * 16.0) / 16.0
+    out = jnp.ldexp(mq, e)
+    return jnp.where(xf <= 0, 0.0, out).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# 4-bit packing (2 codes per byte) — the wire/HBM layout used by kernels and
+# by NVFP4 gradient compression.
+# --------------------------------------------------------------------------
+
+def pack_fp4(codes: jax.Array) -> jax.Array:
+    """Pack uint8 codes in [0,15] pairwise along the last axis (even size)."""
+    lo = codes[..., 0::2]
+    hi = codes[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_fp4(packed: jax.Array) -> jax.Array:
+    """Inverse of pack_fp4."""
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)

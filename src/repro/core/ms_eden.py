@@ -1,0 +1,118 @@
+"""MS-EDEN (paper Algorithm 1): unbiased NVFP4 quantization for micro-scaled
+formats, and its ER-NVFP4 "post hoc range alignment" two-phase variant
+(paper Section 7) that the Pallas kernels implement.
+
+Direct path (Algorithm 1):
+  1. blocked RHT (block 128) seeded by w_rht,
+  2. Q_RTN with grid max s* = (1/0.93)*6*16/17 and FP8 scale cap 256,
+  3. EDEN factor per 16-group: S_g = <x_rht, x_rht> / <x_rht, x_rtn>,
+  4. merge S_g into the E4M3 group scales by stochastic rounding (w_sr).
+
+The result is expressed in ROTATED space; unbiasedness holds after the
+inverse rotation (Corollary 3.1), which in a GEMM cancels against the other
+operand rotated with the same seed, so no inverse is ever materialized.
+
+Post-hoc path (two kernels, no global-absmax barrier):
+  phase 1 (full tensor, tile-local): RHT -> E8M3 pseudo-scales p_g (no global
+    normalization) -> FP4 codes -> per-tile absmax partials + EDEN dots;
+  phase 2 (scales only, d/16 elements): global align p_g/fp32, EDEN-correct,
+    SR to E4M3.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats as F
+from repro.core import quant as Q
+from repro.core import rht as R
+
+
+class MSEdenOut(NamedTuple):
+    qt: Q.QTensor      # NVFP4 triple, values live in ROTATED space
+    rht_key: jax.Array  # seed needed by the GEMM peer / inverse rotation
+
+
+def _eden_factors(x_rot: jax.Array, x_rtn: jax.Array) -> jax.Array:
+    """Per-16-group EDEN correction S_g = <x,x>/<x,Q(x)> (1.0 for zero groups)."""
+    g = F.GROUP
+    xr = x_rot.reshape(*x_rot.shape[:-1], x_rot.shape[-1] // g, g)
+    xq = x_rtn.reshape(*x_rtn.shape[:-1], x_rtn.shape[-1] // g, g)
+    num = jnp.sum(xr * xr, axis=-1)
+    den = jnp.sum(xr * xq, axis=-1)
+    return jnp.where(den != 0, num / jnp.where(den == 0, 1.0, den), 1.0)
+
+
+def ms_eden(
+    x: jax.Array,
+    rht_key: jax.Array,
+    sr_key: jax.Array,
+    s: float = Q.S_EDEN,
+) -> MSEdenOut:
+    """Algorithm 1. Returns NVFP4 QTensor in rotated space."""
+    x_rot = R.rht(x, rht_key)
+    qt = Q.quant_rtn(x_rot, s=s, fp8_cap=256.0)
+    x_rtn = Q.dequant(qt)
+    S = _eden_factors(x_rot, x_rtn)
+    scales = F.fp8_sr_pos(S * qt.scales, sr_key)
+    return MSEdenOut(Q.QTensor(qt.vals, scales, qt.gscale), rht_key)
+
+
+def ms_eden_dequant(out: MSEdenOut, rotated: bool = True) -> jax.Array:
+    """Dequantize; rotated=False additionally applies the inverse rotation
+    (only used by tests — GEMMs consume the rotated representation)."""
+    v = Q.dequant(out.qt)
+    if rotated:
+        return v
+    return R.rht_inv(v, out.rht_key)
+
+
+# ---------------------------------------------------------------------------
+# ER-NVFP4 post-hoc range alignment (paper Section 7) — reference semantics.
+# The Pallas kernel in repro/kernels/ms_eden_requant.py implements phase 1;
+# phase 2 is the tiny scales-only kernel.
+# ---------------------------------------------------------------------------
+
+class Phase1Out(NamedTuple):
+    codes: jax.Array         # uint8 FP4 codes (rotated space)
+    pseudo_scales: jax.Array  # E8M3 pseudo-scales (bf16-exact), (..., d//16)
+    absmax: jax.Array        # global absmax of the ROTATED tensor (scalar)
+    eden_num: jax.Array      # <x_rht, x_rht> per group
+    eden_den: jax.Array      # <x_rht, deq_pseudo> per group
+
+
+def ms_eden_phase1(x: jax.Array, rht_key: jax.Array, s: float = Q.S_EDEN) -> Phase1Out:
+    """Kernel-1 semantics: everything computable without the global absmax."""
+    x_rot = R.rht(x, rht_key)
+    gmax = Q._group_absmax(x_rot)
+    pseudo = F.e8m3_rtn(gmax / s)                     # extended-range scales
+    denom = jnp.repeat(jnp.where(pseudo == 0, 1.0, pseudo), F.GROUP, axis=-1)
+    q = F.fp4_rtn(x_rot / denom)
+    deq = q * denom
+    g = F.GROUP
+    xr = x_rot.reshape(*x_rot.shape[:-1], x_rot.shape[-1] // g, g)
+    xq = deq.reshape(*deq.shape[:-1], deq.shape[-1] // g, g)
+    return Phase1Out(
+        codes=F.fp4_code(q),  # wire format (kernel parity); hot path unused
+        pseudo_scales=pseudo,
+        absmax=jnp.max(jnp.abs(x_rot)),
+        eden_num=jnp.sum(xr * xr, axis=-1),
+        eden_den=jnp.sum(xr * xq, axis=-1),
+    )
+
+
+def ms_eden_phase2(p1: Phase1Out, sr_key: jax.Array, s: float = Q.S_EDEN) -> Q.QTensor:
+    """Kernel-2 semantics: scales-only global alignment + EDEN + SR->E4M3.
+
+    Touches d/16 elements — mirrors the paper's >10x latency asymmetry.
+    """
+    gscale = p1.absmax / (s * 256.0)
+    gscale = jnp.where(gscale == 0, 1.0, gscale)
+    S = jnp.where(p1.eden_den != 0,
+                  p1.eden_num / jnp.where(p1.eden_den == 0, 1.0, p1.eden_den),
+                  1.0)
+    scales = F.fp8_sr_pos(S * p1.pseudo_scales / gscale, sr_key)
+    return Q.QTensor(F.fp4_decode(p1.codes), scales, gscale)

@@ -1,0 +1,58 @@
+"""MXFP4: the OCP micro-scaling alternative to NVFP4 (E2M1 values, one
+power-of-two E8M0 scale per 32 elements, no per-tensor FP32 scale).
+
+The paper cites MXFP4 as the weaker format (NVFP4 "was shown to yield
+superior accuracy", Sec. 3.1, citing NVIDIA et al. 2025 / Egiazarian et al.
+2025); we implement it so the claim is checkable inside this framework:
+benchmarks/table1_mse.py reports both formats side by side, and the
+`fwd_mxfp4` scheme lets any experiment swap formats.
+
+MXFP4 quantization (per 32-group):
+    scale_g = 2^round-down(log2(absmax_g / 6))   (E8M0: power of two)
+    q_i     = RTN_FP4(x_i / scale_g)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats as F
+from repro.core import quant as Q
+
+MX_GROUP = 32
+
+
+def quant_mxfp4(x: jax.Array) -> Q.QTensor:
+    """RTN MXFP4 along the last axis (multiple of 32). Returned in the same
+    QTensor container (scales are powers of two; gscale fixed at 1)."""
+    xf = x.astype(jnp.float32)
+    d = xf.shape[-1]
+    assert d % MX_GROUP == 0, f"inner dim {d} not a multiple of 32"
+    g = xf.reshape(*xf.shape[:-1], d // MX_GROUP, MX_GROUP)
+    gmax = jnp.max(jnp.abs(g), axis=-1)
+    # E8M0: floor power-of-two of absmax/6 (OCP MX spec rounding)
+    e = jnp.floor(jnp.log2(jnp.where(gmax > 0, gmax, 1.0) / 6.0))
+    scales = jnp.where(gmax > 0, jnp.exp2(e), 1.0)
+    denom = jnp.repeat(scales, MX_GROUP, axis=-1).reshape(xf.shape)
+    q = F.fp4_rtn(xf / denom)
+    # repack into 16-wide scale slots for QTensor compatibility (each MX
+    # scale covers two 16-slots)
+    scales16 = jnp.repeat(scales, 2, axis=-1)
+    return Q.QTensor(q, scales16, jnp.float32(1.0))
+
+
+def quant_mxfp4_sr(x: jax.Array, key: jax.Array) -> Q.QTensor:
+    """Stochastic-rounding MXFP4 (the Tseng et al. 2025 backward primitive).
+    Power-of-two scales never clip after the ceil adjustment below."""
+    xf = x.astype(jnp.float32)
+    d = xf.shape[-1]
+    assert d % MX_GROUP == 0
+    g = xf.reshape(*xf.shape[:-1], d // MX_GROUP, MX_GROUP)
+    gmax = jnp.max(jnp.abs(g), axis=-1)
+    e = jnp.ceil(jnp.log2(jnp.where(gmax > 0, gmax, 1.0) / 6.0))  # no clip
+    scales = jnp.where(gmax > 0, jnp.exp2(e), 1.0)
+    denom = jnp.repeat(scales, MX_GROUP, axis=-1).reshape(xf.shape)
+    q = F.fp4_sr(xf / denom, key)
+    scales16 = jnp.repeat(scales, 2, axis=-1)
+    return Q.QTensor(q, scales16, jnp.float32(1.0))

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: NVFP4 GEMM from packed 4-bit codes + E4M3 scales.
+
+C[M, N] = (decode(Ac) * As) @ (decode(Bc) * Bs)^T * (ga * gb)
+
+HBM traffic per element is 4 bits (packed codes) + 0.5 bits (scales) versus
+16 for bf16 — on TPU (no FP4 MXU) this is exactly where the NVFP4 win lives:
+the dequant runs in-VMEM on the VPU and the MXU consumes bf16 block values
+(lossless: 2 + 4 significant bits, see core/linear.py), accumulating fp32.
+
+Grid (M/bm, N/bn, K/bk), K innermost; the fp32 accumulator lives in the
+output block across the K sweep (revisited blocks stay resident in VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import formats as F
+
+DEF_BM = 128
+DEF_BN = 128
+DEF_BK = 512
+
+
+def _decode_vec(codes):
+    """E2M1 decode without a gather: value = sign * m0 * 2^e with the 3-bit
+    magnitude split as (e2, m1). mag = (1 + 0.5*m) * 2^(e-1), special-casing
+    the subnormal pair {0, 0.5}."""
+    c = codes.astype(jnp.int32)
+    sign = jnp.where((c >> 3) & 1, -1.0, 1.0)
+    e = (c >> 1) & 0x3
+    m = c & 0x1
+    mag = jnp.where(e == 0, 0.5 * m, (1.0 + 0.5 * m) * jnp.exp2((e - 1).astype(jnp.float32)))
+    return sign * mag
+
+
+def _kernel(ap_ref, as_ref, bp_ref, bs_ref, g_ref, o_ref, *, bk: int):
+    k_idx = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    def tile(p_ref, s_ref):
+        packed = p_ref[...]
+        lo = (packed & 0xF).astype(jnp.uint8)
+        hi = ((packed >> 4) & 0xF).astype(jnp.uint8)
+        codes = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+        vals = _decode_vec(codes)
+        scales = jnp.repeat(s_ref[...].astype(jnp.float32), F.GROUP, axis=-1)
+        return (vals * scales).astype(jnp.bfloat16)  # lossless block values
+
+    a = tile(ap_ref, as_ref)
+    b = tile(bp_ref, bs_ref)
+    acc = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+    @pl.when(k_idx == nk - 1)
+    def _scale():
+        o_ref[...] *= g_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def fp4_matmul(a_packed, a_scales, b_packed, b_scales, ga, gb,
+               *, bm: int = DEF_BM, bn: int = DEF_BN, bk: int = DEF_BK,
+               interpret: bool = True):
+    """a_packed (M, K//2) u8, a_scales (M, K//16); b likewise (N-major).
+    Returns fp32 (M, N)."""
+    m, kp = a_packed.shape
+    n = b_packed.shape[0]
+    k = kp * 2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0 and bk % F.GROUP == 0
+    g = (ga * gb).astype(jnp.float32).reshape(1, 1)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bk=bk),
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk // 2), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, bk // F.GROUP), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk // 2), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk // F.GROUP), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a_packed, a_scales, b_packed, b_scales, g)

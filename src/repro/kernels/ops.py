@@ -1,0 +1,32 @@
+"""Public jit'd entry points for the Pallas kernels (the `ops.py` layer of
+the kernel contract: <name>.py kernel + ops.py wrapper + ref.py oracle).
+
+On real TPU hardware pass interpret=False; this container validates in
+interpret mode (the kernel bodies execute in Python on CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fp4_matmul import fp4_matmul
+from repro.kernels.ms_eden_requant import ms_eden_requant
+from repro.kernels.nvfp4_quant import nvfp4_fos_quant
+
+__all__ = ["nvfp4_fos_quant", "ms_eden_requant", "fp4_matmul",
+           "quartet2_backward_gemm"]
+
+
+def quartet2_backward_gemm(a, b, rht_key, sr_key_a, sr_key_b, *,
+                           interpret: bool = True):
+    """Fused kernel-path backward GEMM a @ b^T with MS-EDEN re-quantization
+    of both operands (rotations share `rht_key` and cancel in the product) —
+    the kernel-level composition of paper Fig. 3's backward box:
+
+        requant(a), requant(b)  ->  packed codes + scales  ->  fp4_matmul
+    """
+    ac, ascale, ag = ms_eden_requant(a, rht_key, sr_key_a, interpret=interpret)
+    bc, bscale, bg = ms_eden_requant(b, rht_key, sr_key_b, interpret=interpret)
+    from repro.core.formats import pack_fp4
+    return fp4_matmul(pack_fp4(ac), ascale, pack_fp4(bc), bscale, ag, bg,
+                      interpret=interpret)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats as F
+from repro.core import ms_eden as ME
+from repro.core import quant as Q
+
+
+def nvfp4_fos_quant_ref(x: jax.Array):
+    """Oracle for kernels.nvfp4_quant.nvfp4_fos_quant."""
+    qt = Q.quant_four_over_six(x)
+    deq = Q.dequant(qt, jnp.bfloat16)
+    return deq, qt.codes, qt.scales, qt.gscale
+
+
+def ms_eden_requant_ref(x: jax.Array, rht_key: jax.Array, sr_key: jax.Array):
+    """Oracle for kernels.ms_eden_requant (the two-phase post-hoc path)."""
+    p1 = ME.ms_eden_phase1(x, jax.random.wrap_key_data(rht_key))
+    qt = ME.ms_eden_phase2(p1, jax.random.wrap_key_data(sr_key))
+    return qt.codes, qt.scales, qt.gscale
+
+
+def fp4_matmul_ref(a_packed, a_scales, b_packed, b_scales, ga, gb):
+    """Oracle for kernels.fp4_matmul."""
+    def deq(p, s, g):
+        codes = F.unpack_fp4(p)
+        vals = F.fp4_decode(codes)
+        return vals * jnp.repeat(s.astype(jnp.float32), F.GROUP, -1) * g
+    a = deq(a_packed, a_scales, ga)
+    b = deq(b_packed, b_scales, gb)
+    return a @ b.T

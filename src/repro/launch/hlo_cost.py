@@ -1,0 +1,315 @@
+"""Trip-count-aware cost model over compiled (post-SPMD) HLO text.
+
+XLA's HloCostAnalysis (what `compiled.cost_analysis()` reports) counts each
+while-loop body ONCE — with scan-over-layers models that undercounts FLOPs,
+bytes and collective traffic by ~n_layers. This parser rebuilds the three
+roofline inputs with loop trip counts applied:
+
+  - flops:       dot ops, 2 * prod(out_shape) * prod(contracting_dims)
+  - hbm_bytes:   per top-level op, operand bytes + output bytes (fusions
+                 count their interface only — interior ops never touch HBM;
+                 parameters / GTEs / tuples / constants / bitcasts are free)
+  - wire_bytes:  collectives with ring-algorithm accounting (per device):
+                 all-gather & all-to-all (g-1)/g*out; all-reduce 2(g-1)/g*out;
+                 reduce-scatter (g-1)*out; collective-permute 1*out
+
+Trip counts come from the loop condition region: scan lowers to
+`while(cond: i < L)`, so the largest integer constant in the cond region is
+the trip count. Nested loops multiply.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+                "f8e4m3b11fnuz": 1, "s4": 1, "u4": 1}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{")
+_OP_LINE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^()]*\)|[\w\[\],{}\s/*]+?)\s+([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_GROUPS_A = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_B = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_CALLED = re.compile(r"(?:condition|body|to_apply|calls)=%([\w.\-]+)")
+
+FREE_OPS = {"parameter", "get-tuple-element", "tuple", "constant", "bitcast",
+            "after-all", "iota", "partition-id", "replica-id"}
+COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-reduce-start", "all-gather-start",
+               "collective-permute-start"}
+
+
+def _shape_elems_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str   # operand list + attributes (raw tail of the line)
+
+
+@dataclass
+class Computation:
+    name: str
+    params: dict = field(default_factory=dict)   # name -> type_str
+    ops: list = field(default_factory=list)
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                for part in m.group(2).split(","):
+                    part = part.strip()
+                    if ":" in part:
+                        pname, ptype = part.split(":", 1)
+                        cur.params[pname.strip().lstrip("%")] = ptype.strip()
+                comps[cur.name] = cur
+            continue
+        if line == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            cur.ops.append(Op(m.group(1), m.group(2).strip(), m.group(3),
+                              m.group(4)))
+    return comps
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    coll_by_type: dict = field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        self.wire_bytes += o.wire_bytes
+        for k, v in o.coll_by_type.items():
+            self.coll_by_type[k] = self.coll_by_type.get(k, 0.0) + v
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.hbm_bytes * f, self.wire_bytes * f,
+                    {k: v * f for k, v in self.coll_by_type.items()})
+
+
+def _group_size(rest: str, default: int = 2) -> int:
+    m = _GROUPS_A.search(rest)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_B.search(rest)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    """Largest integer constant in the loop-condition region = trip count
+    (scan lowers to `while (i < L)` with i starting at 0)."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.match(r"(\d+)\)", op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+SLICING = {"dynamic-slice", "slice", "gather"}
+
+
+class CostModel:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self._memo: dict[str, Cost] = {}
+        self._fusion_memo: dict[str, tuple[list[float], float | None]] = {}
+        # symbol tables: op name -> type string, per computation
+        self._types: dict[str, dict[str, str]] = {}
+        for cname, comp in self.comps.items():
+            t = dict(comp.params)
+            for op in comp.ops:
+                t[op.name] = op.type_str
+            self._types[cname] = t
+
+    def _operands(self, rest: str) -> list[str]:
+        head = rest.split("), ")[0] if "), " in rest else rest.split(")")[0]
+        return _OPERAND.findall(head)
+
+    def _operand_bytes(self, comp: str, rest: str) -> int:
+        table = self._types[comp]
+        return sum(_shape_elems_bytes(table.get(r, "")) for r in self._operands(rest))
+
+    def _fusion_charges(self, fname: str):
+        """Real HBM traffic of a fusion: per-parameter charged bytes + output
+        charge. A parameter consumed by a (dynamic-)slice/gather inside the
+        fusion is only read at slice-output size (the scan's per-layer param
+        slicing would otherwise be charged the full stacked array every
+        iteration — a ~n_layers x overcount). A fusion rooted in
+        dynamic-update-slice writes only the update region (+aliases the
+        buffer), not the whole output."""
+        if fname in self._fusion_memo:
+            return self._fusion_memo[fname]
+        comp = self.comps.get(fname)
+        if comp is None:
+            self._fusion_memo[fname] = ([], None)
+            return self._fusion_memo[fname]
+        order = list(comp.params.keys())
+        charge = {p: float(_shape_elems_bytes(t)) for p, t in comp.params.items()}
+        table = self._types[fname]
+        out_charge = None
+        for op in comp.ops:
+            refs = self._operands(op.rest)
+            if op.opcode in SLICING and refs:
+                src = refs[0]
+                if src in charge:
+                    charge[src] = min(charge[src],
+                                      float(_shape_elems_bytes(op.type_str)))
+            elif op.opcode == "dynamic-update-slice" and len(refs) >= 2:
+                upd_b = float(_shape_elems_bytes(table.get(refs[1], "")))
+                out_charge = 2.0 * upd_b  # read-modify-write of the region
+                if refs[0] in charge:
+                    charge[refs[0]] = 0.0  # buffer aliased in place
+        self._fusion_memo[fname] = ([charge[p] for p in order], out_charge)
+        return self._fusion_memo[fname]
+
+    def computation_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()  # cycle guard
+        comp = self.comps.get(name)
+        if comp is None:
+            return Cost()
+        total = Cost()
+        for op in comp.ops:
+            oc = op.opcode
+            if oc in FREE_OPS:
+                continue
+            out_b = _shape_elems_bytes(op.type_str)
+            if oc == "while":
+                called = dict(re.findall(r"(condition|body)=%([\w.\-]+)", op.rest))
+                trips = _trip_count(self.comps, called.get("condition", ""))
+                body = self.computation_cost(called.get("body", ""))
+                total += body.scaled(trips)
+                # loop state stays resident; count one pass of the tuple
+                total.hbm_bytes += out_b
+                continue
+            if oc == "call":
+                m = _CALLED.search(op.rest)
+                if m:
+                    total += self.computation_cost(m.group(1))
+                continue
+            if oc == "conditional":
+                for branch in re.findall(r"%([\w.\-]+)", op.rest.split("),")[-1]):
+                    if branch in self.comps:
+                        total += self.computation_cost(branch)
+                continue
+            if oc == "fusion":
+                m = _CALLED.search(op.rest)
+                charges, out_charge = self._fusion_charges(m.group(1)) if m else ([], None)
+                refs = self._operands(op.rest)
+                in_b = 0.0
+                for i, r in enumerate(refs):
+                    if i < len(charges):
+                        in_b += charges[i]
+                    else:
+                        in_b += _shape_elems_bytes(self._types[comp.name].get(r, ""))
+                total.hbm_bytes += (out_charge if out_charge is not None else out_b) + in_b
+                continue
+            if oc in SLICING:
+                total.hbm_bytes += 2.0 * out_b  # read slice + write slice
+                continue
+            if oc == "dynamic-update-slice":
+                refs = self._operands(op.rest)
+                upd = _shape_elems_bytes(self._types[comp.name].get(
+                    refs[1] if len(refs) > 1 else "", ""))
+                total.hbm_bytes += 2.0 * upd
+                continue
+            in_b = self._operand_bytes(comp.name, op.rest)
+            total.hbm_bytes += out_b + in_b
+            if oc == "dot":
+                dims = _shape_dims(op.type_str)
+                out_elems = 1
+                for d in dims:
+                    out_elems *= d
+                # contracting size from lhs operand type
+                m = _CONTRACT.search(op.rest)
+                refs = _OPERAND.findall(op.rest)
+                k = 1
+                if m and refs:
+                    lhs_t = self._types[comp.name].get(refs[0], "")
+                    lhs_dims = _shape_dims(lhs_t)
+                    for ci in m.group(1).split(","):
+                        if ci and int(ci) < len(lhs_dims):
+                            k *= lhs_dims[int(ci)]
+                total.flops += 2.0 * out_elems * k
+            elif oc in ("convolution",):
+                total.flops += 2.0 * _shape_elems_bytes(op.type_str)  # coarse
+            elif oc.rstrip("-start") in COLLECTIVES or oc in COLLECTIVES:
+                base = oc[:-6] if oc.endswith("-start") else oc
+                g = _group_size(op.rest)
+                if base == "all-reduce":
+                    wire = 2 * out_b * (g - 1) / g
+                elif base == "reduce-scatter":
+                    wire = out_b * (g - 1)
+                elif base == "collective-permute":
+                    wire = out_b
+                else:
+                    wire = out_b * (g - 1) / g
+                total.wire_bytes += wire
+                total.coll_by_type[base] = total.coll_by_type.get(base, 0.0) + wire
+                total.coll_by_type[base + "_count"] = \
+                    total.coll_by_type.get(base + "_count", 0) + 1
+        self._memo[name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        for name, comp in self.comps.items():
+            # the entry is the one whose name starts with 'main'
+            if name.startswith("main"):
+                return self.computation_cost(name)
+        # fallback: largest computation
+        best, bc = None, -1
+        for name, comp in self.comps.items():
+            if len(comp.ops) > bc:
+                best, bc = name, len(comp.ops)
+        return self.computation_cost(best)
+
+
+def analyze(hlo_text: str) -> Cost:
+    return CostModel(hlo_text).entry_cost()

@@ -1,0 +1,74 @@
+"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m repro.launch.roofline_report [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def fmt_t(s: float) -> str:
+    return f"{s * 1e3:.2f}"
+
+
+def load(dirname: str) -> list[dict]:
+    out = []
+    for f in sorted(os.listdir(dirname)):
+        if f.endswith(".json"):
+            with open(os.path.join(dirname, f)) as fh:
+                out.append(json.load(fh))
+    return out
+
+
+def dryrun_table(rows: list[dict]) -> str:
+    lines = ["| arch | shape | mesh | scheme | compile | args GiB/dev | temp GiB/dev | collectives |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | SKIP | — | — | {r['skipped'][:60]} |")
+            continue
+        m = r["memory"]
+        cc = r.get("collectives", {})
+        cstr = " ".join(f"{k}:{int(v)}" for k, v in cc.items()
+                        if k.endswith("_count"))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['scheme']} "
+            f"| {r['compile_s']:.0f}s | {m['args_bytes'] / 2**30:.2f} "
+            f"| {m['temp_bytes'] / 2**30:.2f} | {cstr} |")
+    return "\n".join(lines)
+
+
+def roofline_table(rows: list[dict], mesh: str = "16x16") -> str:
+    lines = ["| arch | shape | compute ms | memory ms | coll ms | bottleneck | useful-FLOPs ratio | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r or r.get("mesh") != mesh:
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_t(t['compute_s'])} "
+            f"| {fmt_t(t['memory_s'])} | {fmt_t(t['collective_s'])} "
+            f"| {r['bottleneck'].replace('_s', '')} "
+            f"| {r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    done = [r for r in rows if "skipped" not in r]
+    skips = [r for r in rows if "skipped" in r]
+    print(f"## Dry-run ({len(done)} compiled cells, {len(skips)} skips)\n")
+    print(dryrun_table(rows))
+    print(f"\n## Roofline ({args.mesh})\n")
+    print(roofline_table(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

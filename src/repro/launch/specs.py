@@ -1,0 +1,54 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell —
+weak-type-correct, shardable, zero device allocation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig
+from repro.models import lm
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ArchConfig, shape: str) -> dict:
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    out = {}
+    if cfg.input_mode == "embeds":
+        out["embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+    if cfg.enc_dec or cfg.input_mode == "tokens":
+        out["tokens"] = SDS((b, s), jnp.int32)
+    out["labels"] = SDS((b, s), jnp.int32)
+    return out
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    """ShapeDtypeStructs of the decode cache (eval_shape over init_cache)."""
+    if cfg.enc_dec:
+        return jax.eval_shape(
+            lambda: lm.init_encdec_cache(cfg, batch, max_len, enc_len=max_len))
+    return jax.eval_shape(lambda: lm.init_cache(cfg, batch, max_len))
+
+
+def prefill_specs(cfg: ArchConfig, shape: str):
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    batch = {}
+    if cfg.input_mode == "embeds":
+        batch["embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+    if cfg.enc_dec or cfg.input_mode == "tokens":
+        batch["tokens"] = SDS((b, s), jnp.int32)
+    return batch, cache_specs(cfg, b, s)
+
+
+def decode_specs(cfg: ArchConfig, shape: str):
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    tokens = SDS((b, 1), jnp.int32)
+    return tokens, cache_specs(cfg, b, s)
+
+
+def param_specs(cfg: ArchConfig):
+    return jax.eval_shape(lambda: lm.init(cfg, jax.random.PRNGKey(0)))

@@ -1,0 +1,221 @@
+"""Attention: GQA/MQA with RoPE (full/partial), QK-norm, sliding-window (local)
+masks, chunked online-softmax for long prefill, and KV-cache decode.
+
+All four projections run through the quantized linear (paper Fig. 3 applies
+the scheme to every linear layer); the softmax itself stays fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import qlinear
+from repro.models.blocks import rmsnorm, site_seed
+
+NEG_INF = -1e30
+# plain (materialized-scores) attention below this sequence length; chunked
+# online-softmax above (prefill_32k would otherwise materialize S^2 scores).
+CHUNK_THRESHOLD = 8192
+Q_BLOCK = 1024
+KV_BLOCK = 1024
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_tables(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for `dim` rotary dims at given positions (…,)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array, fraction: float = 1.0):
+    """Rotate the first `fraction` of head dims (chatglm3 uses 0.5, '2d' RoPE)."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    c = cos[..., None, : rot // 2]
+    s = sin[..., None, : rot // 2]
+    o1 = x1 * c - x2 * s
+    o2 = x2 * c + x1 * s
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# masks / SDPA
+# --------------------------------------------------------------------------
+
+def _mask_bias(sq: int, sk: int, q_off, causal: bool, window: int | None):
+    qi = q_off + jnp.arange(sq)[:, None]
+    kj = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kj <= qi
+    if window is not None:
+        ok &= kj > qi - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def sdpa(q, k, v, *, causal=True, window=None, q_off=0):
+    """Plain SDPA. q: (B,Sq,H,hd), k: (B,Sk,KV,hd), v: (B,Sk,KV,vd)
+    -> (B,Sq,H,vd). vd may differ from hd (MLA)."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    qf = q.reshape(b, sq, kv, rep, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqgrh,bkgh->bgrqk", qf, kf) / jnp.sqrt(hd)
+    scores = scores + _mask_bias(sq, k.shape[1], q_off, causal, window)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bgrqk,bkgv->bqgrv", p, vf)
+    return o.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+def chunked_sdpa(q, k, v, *, causal=True, window=None):
+    """Online-softmax attention over KV blocks (flash-style, inference paths).
+
+    Never materializes (Sq, Sk) scores: peak transient is (B, H, Q_BLOCK,
+    KV_BLOCK) — the memory-roofline fix for prefill_32k.
+    """
+    b, sq, h, hd = q.shape
+    vd = v.shape[-1]
+    kv = k.shape[2]
+    rep = h // kv
+    sk = k.shape[1]
+    nq, nk = sq // Q_BLOCK if sq >= Q_BLOCK else 1, max(sk // KV_BLOCK, 1)
+    qb = Q_BLOCK if sq >= Q_BLOCK else sq
+    kb = sk // nk
+    qf = q.reshape(b, nq, qb, kv, rep, hd).astype(jnp.float32)
+    kf = k.reshape(b, nk, kb, kv, hd).astype(jnp.float32)
+    vf = v.reshape(b, nk, kb, kv, vd).astype(jnp.float32)
+
+    def q_block(qi, qblk):
+        q_off = qi * qb
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk = kf[:, ki]
+            vblk = vf[:, ki]
+            s = jnp.einsum("bqgrh,bkgh->bgrqk", qblk, kblk) / jnp.sqrt(hd)
+            s = s + _mask_bias(qb, kb, q_off - ki * kb, causal, window)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bgrqk,bkgv->bgrqv", p, vblk)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, kv, rep, qb), NEG_INF, jnp.float32),
+                jnp.zeros((b, kv, rep, qb), jnp.float32),
+                jnp.zeros((b, kv, rep, qb, vd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return o.transpose(0, 3, 1, 2, 4)  # (b, qb, kv, rep, hd)
+
+    out = jax.lax.map(lambda qi: q_block(qi, qf[:, qi]), jnp.arange(nq))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, vd)
+    return out.astype(q.dtype)
+
+
+def attend(q, k, v, *, causal=True, window=None):
+    if q.shape[1] > CHUNK_THRESHOLD or k.shape[1] > CHUNK_THRESHOLD:
+        return chunked_sdpa(q, k, v, causal=causal, window=window)
+    return sdpa(q, k, v, causal=causal, window=window)
+
+
+def decode_sdpa(q, k_cache, v_cache, pos, window=None):
+    """Single-position decode. q: (B,1,H,hd); caches (B,Smax,KV,hd); pos (B,)."""
+    from repro.core import linear as QL  # sharding hints (None off-mesh)
+    b, _, h, hd = q.shape
+    kv = k_cache.shape[2]
+    rep = h // kv
+    sk = k_cache.shape[1]
+    qf = q.reshape(b, kv, rep, hd).astype(jnp.float32)
+    # Perf iteration (decode): the KV cache shards head_dim over "model"; pin
+    # q to the SAME hd sharding and the score layout to batch-DP so the
+    # contraction lowers to a psum of (B,KV,rep,S) scores instead of
+    # all-gathering the multi-GiB cache.
+    qf = QL._hint(qf, (QL._dp(b), None, None, QL._tp(hd)))
+    s = jnp.einsum("bgrh,bkgh->bgrk", qf, k_cache.astype(jnp.float32)) / jnp.sqrt(hd)
+    s = QL._hint(s, (QL._dp(b), None, None, None))
+    kj = jnp.arange(sk)[None, :]
+    ok = kj <= pos[:, None]
+    if window is not None:
+        ok &= kj > (pos[:, None] - window)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrk,bkgv->bgrv", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA block
+# --------------------------------------------------------------------------
+
+def gqa_init(key, cfg):
+    from repro.models.blocks import linear_init
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": linear_init(ks[0], cfg.n_heads * hd, cfg.d_model),
+        "wk": linear_init(ks[1], cfg.n_kv_heads * hd, cfg.d_model),
+        "wv": linear_init(ks[2], cfg.n_kv_heads * hd, cfg.d_model),
+        "wo": linear_init(ks[3], cfg.d_model, cfg.n_heads * hd),
+    }
+    if cfg.qk_norm:
+        p["qn"] = jnp.ones((hd,), jnp.float32)
+        p["kn"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, cfg, scheme, seed, layer, positions):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = qlinear(x, p["wq"], site_seed(seed, layer, 0), scheme).reshape(b, s, cfg.n_heads, hd)
+    k = qlinear(x, p["wk"], site_seed(seed, layer, 1), scheme).reshape(b, s, cfg.n_kv_heads, hd)
+    v = qlinear(x, p["wv"], site_seed(seed, layer, 2), scheme).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["qn"], cfg.norm_eps)
+        k = rmsnorm(k, p["kn"], cfg.norm_eps)
+    if cfg.rope_fraction > 0:
+        rot = int(hd * cfg.rope_fraction)
+        cos, sin = rope_tables(positions, rot, cfg.rope_theta)
+        q = apply_rope(q, cos, sin, cfg.rope_fraction)
+        k = apply_rope(k, cos, sin, cfg.rope_fraction)
+    return q, k, v
+
+
+def gqa_apply(p, x, cfg, scheme, seed, layer, *, causal=True, window=None,
+              positions=None):
+    """Full-sequence GQA (train / prefill). Returns (out, (k, v)) so callers
+    can populate a decode cache."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, scheme, seed, layer, positions)
+    o = attend(q, k, v, causal=causal, window=window)
+    out = qlinear(o.reshape(b, s, -1), p["wo"], site_seed(seed, layer, 3), scheme)
+    return out, (k, v)
+
+
+def gqa_decode(p, x, cfg, scheme, seed, layer, cache_kv, pos, *, window=None):
+    """One-token decode. cache_kv: (k,v) of shape (B, Smax, KV, hd); pos is a
+    scalar step index (uniform across the batch, standard serving layout) so
+    the cache update is a single dynamic slice, not a full-cache rewrite."""
+    b = x.shape[0]
+    posb = jnp.full((b,), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, scheme, seed, layer, posb[:, None])
+    kc, vc = cache_kv
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+    o = decode_sdpa(q, kc, vc, posb, window=window)
+    out = qlinear(o.reshape(b, 1, -1), p["wo"], site_seed(seed, layer, 3), scheme)
+    return out, (kc, vc)

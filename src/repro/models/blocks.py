@@ -1,0 +1,139 @@
+"""Shared building blocks: norms, MLPs, embeddings, seed plumbing, init."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import dense, qlinear
+
+
+def site_seed(seed: jax.Array, layer, site: int) -> jax.Array:
+    """Derive a distinct uint32[2] sub-seed per (layer, call-site).
+
+    Cheap LCG-style mixing (no threefry inside scan bodies); qlinear folds the
+    result into a typed key anyway.
+    """
+    layer = jnp.asarray(layer, jnp.uint32)
+    a = seed[0] ^ (layer * jnp.uint32(2654435761) + jnp.uint32(site) * jnp.uint32(40503))
+    b = seed[1] + layer * jnp.uint32(97) + jnp.uint32(site)
+    return jnp.stack([a, b])
+
+
+def rmsnorm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    n = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (n * g.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, g: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * g + b).astype(x.dtype)
+
+
+def norm(x, p, kind: str, eps: float):
+    if kind == "layernorm":
+        return layernorm(x, p["g"], p["b"], eps)
+    return rmsnorm(x, p["g"], eps)
+
+
+def norm_init(d: int, kind: str):
+    if kind == "layernorm":
+        return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def linear_init(key, n_out: int, n_in: int, scale: float | None = None) -> jax.Array:
+    s = scale if scale is not None else n_in ** -0.5
+    return (jax.random.normal(key, (n_out, n_in), jnp.float32) * s)
+
+
+def mlp_apply(p, x, kind: str, scheme: str, seed, layer):
+    """swiglu | relu2 | gelu feed-forward, all matmuls quantized per scheme."""
+    if kind == "swiglu":
+        h = qlinear(x, p["wi"], site_seed(seed, layer, 10), scheme)
+        g = qlinear(x, p["wg"], site_seed(seed, layer, 11), scheme)
+        a = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * g
+    elif kind == "relu2":
+        h = qlinear(x, p["wi"], site_seed(seed, layer, 10), scheme)
+        a = (jax.nn.relu(h.astype(jnp.float32)) ** 2).astype(x.dtype)
+    else:  # gelu
+        h = qlinear(x, p["wi"], site_seed(seed, layer, 10), scheme)
+        a = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return qlinear(a, p["wo"], site_seed(seed, layer, 12), scheme)
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str):
+    ks = jax.random.split(key, 3)
+    p = {"wi": linear_init(ks[0], d_ff, d_model),
+         "wo": linear_init(ks[1], d_model, d_ff)}
+    if kind == "swiglu":
+        p["wg"] = linear_init(ks[2], d_ff, d_model)
+    return p
+
+
+def embed_init(key, vocab: int, d_model: int):
+    return jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array, dtype=jnp.bfloat16):
+    return jnp.take(table, tokens, axis=0).astype(dtype)
+
+
+def lm_head(x: jax.Array, w: jax.Array, quantize: bool, scheme: str, seed) -> jax.Array:
+    """Final projection to vocab. Paper practice keeps this in BF16."""
+    if quantize:
+        return qlinear(x, w, site_seed(seed, 0, 99), scheme)
+    return dense(x, w)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, z_loss: float = 0.0):
+    """Token-mean CE in fp32; labels < 0 are masked out."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse ** 2
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_head_ce(x: jax.Array, head_w: jax.Array, labels: jax.Array,
+                    quantize: bool, scheme: str, seed,
+                    chunk_tokens: int = 1024) -> jax.Array:
+    """Fused LM-head + CE that never materializes the full (tokens, vocab)
+    logits: the flattened token axis is processed in chunks under
+    jax.checkpoint, so both forward and backward peak at
+    (chunk_tokens x vocab) — the memory-roofline fix for 256k-vocab archs
+    (nemotron, recurrentgemma) where full logits would be O(100GiB)/device.
+
+    Returns (sum_nll, n_tokens) so callers can combine with masking."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    lf = labels.reshape(t)
+    n_chunks = max(1, t // chunk_tokens)
+    while t % n_chunks:
+        n_chunks -= 1
+    xc = xf.reshape(n_chunks, t // n_chunks, d)
+    lc = lf.reshape(n_chunks, t // n_chunks)
+
+    @jax.checkpoint
+    def one(xi, li):
+        logits = lm_head(xi[None], head_w, quantize, scheme, seed)[0]
+        logf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logf, axis=-1)
+        gold = jnp.take_along_axis(
+            logf, jnp.maximum(li, 0)[:, None], axis=-1)[:, 0]
+        mask = (li >= 0).astype(jnp.float32)
+        return jnp.sum((lse - gold) * mask), jnp.sum(mask)
+
+    def body(carry, inp):
+        nll, cnt = one(*inp)
+        return (carry[0] + nll, carry[1] + cnt), None
+
+    (nll, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (xc, lc))
+    return nll / jnp.maximum(cnt, 1.0)

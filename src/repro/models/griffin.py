@@ -1,0 +1,114 @@
+"""Griffin / RecurrentGemma building blocks: RG-LRU recurrent block with a
+short depthwise temporal conv, plus sliding-window local attention, in the
+1-attention-per-2-recurrent layer pattern.
+
+RG-LRU (Real-Gated Linear Recurrent Unit):
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    log a_t = -c * softplus(L) . r_t      (c = 8)
+    h_t = a_t . h_{t-1} + sqrt(1 - a_t^2) . (i_t . x_t)
+
+Full sequences evaluate via jax.lax.associative_scan (log-depth, O(S) work,
+sub-quadratic — this is why recurrentgemma runs the long_500k cell); decode
+is a single elementwise step. Projections are quantized linears; the
+recurrence stays fp32 elementwise.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import qlinear
+from repro.models.blocks import linear_init, site_seed
+
+LRU_C = 8.0
+
+
+def rglru_init(key, cfg):
+    g = cfg.griffin
+    w = g.lru_width or cfg.d_model
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": linear_init(ks[0], w, d),      # x branch
+        "w_gate": linear_init(ks[1], w, d),    # gelu gate branch
+        "w_out": linear_init(ks[2], d, w),
+        "conv_w": jax.random.normal(ks[3], (g.conv_width, w), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "wa": linear_init(ks[4], w, w, scale=0.01),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wx": linear_init(ks[5], w, w, scale=0.01),
+        "bx": jnp.zeros((w,), jnp.float32),
+        # Lambda init so a^c ~ U[0.9, 0.999] (per the Griffin paper)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / LRU_C)).astype(jnp.float32),
+    }
+
+
+def _conv1d(x, w, b, tail=None):
+    """Causal depthwise temporal conv, width K. x: (B,S,W); tail: (B,K-1,W)."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k))
+    return out + b.astype(x.dtype), xp[:, -(k - 1):]
+
+
+def _rglru_gates(p, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["wa"].T.astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(uf @ p["wx"].T.astype(jnp.float32) + p["bx"])
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12, 1.0))
+    return a, beta * i * uf
+
+
+def rglru_scan(p, u, h0=None):
+    """Full-sequence RG-LRU via associative scan. u: (B,S,W) -> (B,S,W)."""
+    a, b = _rglru_gates(p, u)
+    if h0 is not None:
+        # fold the carried state in as a virtual step 0
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0[:, None].astype(jnp.float32), b], axis=1)
+
+    def comb(x, y):
+        return (x[0] * y[0], x[1] * y[0] + y[1])
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(u.dtype)
+
+
+def rglru_step(p, u1, h):
+    """One decode step. u1: (B,1,W); h: (B,W)."""
+    a, b = _rglru_gates(p, u1)
+    h = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return h[:, None].astype(u1.dtype), h
+
+
+def recurrent_block_apply(p, x, cfg, scheme, seed, layer, *, state=None):
+    """Griffin recurrent block. state = (h, conv_tail) or None (train)."""
+    b, s, _ = x.shape
+    u = qlinear(x, p["w_in"], site_seed(seed, layer, 0), scheme)
+    gate = qlinear(x, p["w_gate"], site_seed(seed, layer, 1), scheme)
+    h0, tail = state if state is not None else (None, None)
+    u, tail = _conv1d(u, p["conv_w"], p["conv_b"], tail)
+    if s == 1 and h0 is not None:
+        hseq, h = rglru_step(p, u, h0)
+    else:
+        hseq = rglru_scan(p, u, h0)
+        h = hseq[:, -1].astype(jnp.float32)
+    y = hseq * jax.nn.gelu(gate.astype(jnp.float32)).astype(hseq.dtype)
+    out = qlinear(y, p["w_out"], site_seed(seed, layer, 2), scheme)
+    return out, (h, tail)
+
+
+def recurrent_state_init(cfg, batch: int):
+    g = cfg.griffin
+    w = g.lru_width or cfg.d_model
+    return (jnp.zeros((batch, w), jnp.float32),
+            jnp.zeros((batch, g.conv_width - 1, w), jnp.bfloat16))

@@ -1,0 +1,110 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Train/prefill use the expanded form; decode uses the weight-absorbed form over
+the compressed latent cache (kv_lora_rank + rope dims per position — the whole
+point of MLA: the KV cache is ~576 floats/token instead of 2*H*hd).
+
+All projections are quantized linears; the absorbed decode einsums are bf16
+(inference path, not part of the paper's training recipe).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import qlinear
+from repro.models.attention import NEG_INF, apply_rope, attend, rope_tables
+from repro.models.blocks import linear_init, rmsnorm, site_seed
+
+
+def mla_init(key, cfg):
+    m = cfg.mla
+    h = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": linear_init(ks[0], m.q_lora_rank, cfg.d_model),
+        "q_norm": jnp.ones((m.q_lora_rank,), jnp.float32),
+        "wq_b": linear_init(ks[1], h * qk_dim, m.q_lora_rank),
+        "wkv_a": linear_init(ks[2], m.kv_lora_rank + m.qk_rope_head_dim, cfg.d_model),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+        "wkv_b": linear_init(ks[3], h * (m.qk_nope_head_dim + m.v_head_dim), m.kv_lora_rank),
+        "wo": linear_init(ks[4], cfg.d_model, h * m.v_head_dim),
+    }
+
+
+def _latent(p, x, cfg, scheme, seed, layer, positions):
+    """Shared projections: per-head q (nope+rope), latent c, rotated k_rope."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = qlinear(rmsnorm(qlinear(x, p["wq_a"], site_seed(seed, layer, 0), scheme),
+                        p["q_norm"], cfg.norm_eps),
+                p["wq_b"], site_seed(seed, layer, 1), scheme).reshape(b, s, h, qk)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    kv = qlinear(x, p["wkv_a"], site_seed(seed, layer, 2), scheme)
+    c = rmsnorm(kv[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., m.kv_lora_rank:][:, :, None, :]  # (B,S,1,rope)
+    cos, sin = rope_tables(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+    return q_nope, q_rope, c, k_rope
+
+
+def mla_apply(p, x, cfg, scheme, seed, layer, *, positions=None):
+    """Expanded-form MLA (train / prefill). Returns (out, (c, k_rope)) for the
+    latent decode cache."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q_nope, q_rope, c, k_rope = _latent(p, x, cfg, scheme, seed, layer, positions)
+    kvb = qlinear(c, p["wkv_b"], site_seed(seed, layer, 3), scheme)
+    kvb = kvb.reshape(b, s, h, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = kvb[..., : m.qk_nope_head_dim], kvb[..., m.qk_nope_head_dim:]
+    # fold rope part into the head dim so standard SDPA applies
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (*k_rope.shape[:2], h, k_rope.shape[-1]))], axis=-1)
+    o = attend(q_full, k_full, v, causal=True)
+    out = qlinear(o.reshape(b, s, -1), p["wo"], site_seed(seed, layer, 4), scheme)
+    return out, (c, k_rope[:, :, 0, :])
+
+
+def mla_decode(p, x, cfg, scheme, seed, layer, cache, pos):
+    """Absorbed-form decode over the latent cache.
+
+    cache = (c: (B,Smax,kv_lora), kr: (B,Smax,rope)); pos scalar.
+    score_h(t) = q_nope_h^T Wuk_h c_t + q_rope_h^T kr_t   (Wuk absorbed into q)
+    out_h = (sum_t p_t c_t)^T Wuv_h                        (Wuv absorbed after)
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    posb = jnp.full((b,), pos, jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _latent(p, x, cfg, scheme, seed, layer, posb[:, None])
+    cc, kc = cache
+    cc = jax.lax.dynamic_update_slice_in_dim(cc, c_new.astype(cc.dtype), pos, axis=1)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, kr_new[:, :, 0, :].astype(kc.dtype), pos, axis=1)
+
+    wkv_b = p["wkv_b"].reshape(h, m.qk_nope_head_dim + m.v_head_dim, m.kv_lora_rank)
+    w_uk = wkv_b[:, : m.qk_nope_head_dim, :]     # (H, nope, lora)
+    w_uv = wkv_b[:, m.qk_nope_head_dim:, :]      # (H, v, lora)
+
+    q_abs = jnp.einsum("bqhn,hnl->bhl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))              # (B,H,lora)
+    s_lat = jnp.einsum("bhl,btl->bht", q_abs, cc.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhr,btr->bht", q_rope.astype(jnp.float32),
+                        kc.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = (s_lat + s_rope) * scale
+    tmask = jnp.arange(cc.shape[1])[None, None, :] <= pos
+    s = jnp.where(tmask, s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bht,btl->bhl", prob, cc.astype(jnp.float32))
+    o = jnp.einsum("bhl,hvl->bhv", o_lat, w_uv.astype(jnp.float32))
+    out = qlinear(o.reshape(b, 1, -1).astype(x.dtype), p["wo"],
+                  site_seed(seed, layer, 4), scheme)
+    return out, (cc, kc)

@@ -1,0 +1,202 @@
+"""RWKV-6 "Finch": attention-free time-mix with data-dependent per-channel
+decay, in a chunk-parallel formulation.
+
+Recurrence per head (d = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+
+Chunked evaluation (chunk C): with logP = cumsum(log w) inside the chunk and
+logQ_t = logP_{t-1} (logQ_0 = 0), the intra-chunk pairwise decays factor as
+exp(logQ_t - logP_j) = exp(logQ_t) * exp(-logP_j), so
+
+    o_t = (r_t . exp(logQ_t)) @ S_0                          (inter-chunk)
+        + tril_strict[(r.exp(logQ)) @ (k.exp(-logP))^T] @ v  (intra-chunk)
+        + (r_t . u . k_t) v_t                                (current token)
+    S_C = exp(logP_C) . S_0 + ((k.exp(-logP)) * exp(logP_C))^T @ v
+
+Numerics: the factored form needs exp(-logP) bounded; per-step log-decay is
+clamped to >= LOG_W_MIN so exp(-logP) <= exp(C * |LOG_W_MIN|) stays in fp32
+(documented deviation from reference RWKV-6, which allows unbounded decay).
+
+All projections (r/k/v/gate/output, channel-mix) are quantized linears; the
+recurrence itself is elementwise fp32 (the paper only quantizes GEMMs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import qlinear
+from repro.models.blocks import linear_init, rmsnorm, site_seed
+
+LOG_W_MIN = -5.0  # per-step decay clamp (see numerics note above)
+
+
+def rwkv_init(key, cfg):
+    d = cfg.d_model
+    r = cfg.rwkv.lora_rank
+    ks = jax.random.split(key, 12)
+    return {
+        # token-shift static mixes + data-dependent LoRA (5 targets: r,k,v,w,g)
+        "mu": jax.random.uniform(ks[0], (5, d), jnp.float32),
+        "mix_w1": linear_init(ks[1], 5 * r, d, scale=0.01),
+        "mix_w2": jax.random.normal(ks[2], (5, r, d), jnp.float32) * 0.01,
+        "wr": linear_init(ks[3], d, d),
+        "wk": linear_init(ks[4], d, d),
+        "wv": linear_init(ks[5], d, d),
+        "wg": linear_init(ks[6], d, d),
+        "wo": linear_init(ks[7], d, d),
+        # decay: w0 static + LoRA; u bonus
+        "w0": jnp.full((d,), -1.0, jnp.float32),
+        "ww1": linear_init(ks[8], r, d, scale=0.01),
+        "ww2": linear_init(ks[9], d, r, scale=0.01),
+        "u": jax.random.normal(ks[10], (d,), jnp.float32) * 0.1,
+        "gn": jnp.ones((d,), jnp.float32),  # per-head groupnorm gain
+        # channel-mix
+        "cm_mu": jax.random.uniform(ks[11], (2, d), jnp.float32),
+        "cm_wr": linear_init(jax.random.fold_in(key, 20), d, d),
+        "cm_wk": linear_init(jax.random.fold_in(key, 21), cfg.d_ff, d),
+        "cm_wv": linear_init(jax.random.fold_in(key, 22), d, cfg.d_ff),
+    }
+
+
+def _shift(x: jax.Array, prev: jax.Array | None):
+    """Token shift: x_{t-1} (prev carries the last token across steps/chunks)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix_inputs(p, x, shifted):
+    """Data-dependent token-shift interpolation (5 mixed variants of x)."""
+    xx = shifted - x
+    dyn = jnp.tanh(xx.astype(jnp.float32) @ p["mix_w1"].T.astype(jnp.float32))
+    b, s, _ = x.shape
+    r = p["mix_w2"].shape[1]
+    dyn = dyn.reshape(b, s, 5, r)
+    off = jnp.einsum("bsfr,frd->bsfd", dyn, p["mix_w2"].astype(jnp.float32))
+    mix = p["mu"][None, None] + off                    # (B,S,5,D)
+    return x[:, :, None, :] + xx[:, :, None, :] * mix.astype(x.dtype)
+
+
+def _decay(p, xw):
+    """Per-token per-channel log-decay, clamped (see module docstring)."""
+    lo = jnp.tanh(xw.astype(jnp.float32) @ p["ww1"].T.astype(jnp.float32)) @ p["ww2"].T.astype(jnp.float32)
+    logw = -jnp.exp(jnp.clip(p["w0"][None, None] + lo, -8.0, 1.6))
+    return jnp.clip(logw, LOG_W_MIN, -1e-4)
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int):
+    """Chunk-parallel WKV. r/k/v/logw: (B,S,H,d); u: (H,d);
+    state: (B,H,d,d). Returns (out (B,S,H,d), new state)."""
+    b, s, h, d = r.shape
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    n = s // chunk
+
+    def to_chunks(x):
+        return x.reshape(b, n, chunk, h, d).transpose(1, 0, 3, 2, 4)  # (N,B,H,C,d)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, logw))
+
+    def step(S, inp):
+        rr, kk, vv, ww = [t.astype(jnp.float32) for t in inp]
+        logP = jnp.cumsum(ww, axis=-2)                 # (B,H,C,d)
+        logQ = logP - ww                               # logP_{t-1}
+        rq = rr * jnp.exp(logQ)
+        kp = kk * jnp.exp(-logP)
+        A = jnp.einsum("bhtd,bhjd->bhtj", rq, kp)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        A = jnp.where(tri[None, None], A, 0.0)
+        intra = jnp.einsum("bhtj,bhjd->bhtd", A, vv)
+        bonus = jnp.einsum("bhtd,hd,bhtd->bht", rr, u.astype(jnp.float32), kk)
+        intra = intra + bonus[..., None] * vv
+        inter = jnp.einsum("bhtd,bhde->bhte", rq, S)
+        pC = jnp.exp(logP[:, :, -1])                   # (B,H,d)
+        S_new = pC[..., None] * S + jnp.einsum(
+            "bhjd,bhje->bhde", kp * pC[:, :, None, :], vv)
+        return S_new, (intra + inter)
+
+    state, outs = jax.lax.scan(step, state.astype(jnp.float32), (rc, kc, vc, wc))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, s, h, d)
+    return out.astype(r.dtype), state
+
+
+def _wkv_step(rr, kk, vv, ww, u, state):
+    """One recurrence step. rr/kk/vv/ww: (B,H,d) fp32; state (B,H,d,d)."""
+    o = jnp.einsum("bhd,bhde->bhe", rr, state) + \
+        jnp.einsum("bhd,hd,bhd->bh", rr, u, kk)[..., None] * vv
+    state = jnp.exp(ww)[..., None] * state + kk[..., None] * vv[:, :, None, :]
+    return o, state
+
+
+def wkv_decode(r, k, v, logw, u, state):
+    """Single-token WKV: O(d^2) per head. r/k/v/logw: (B,1,H,d)."""
+    rr, kk, vv, ww = [t[:, 0].astype(jnp.float32) for t in (r, k, v, logw)]
+    o, state = _wkv_step(rr, kk, vv, ww, u.astype(jnp.float32), state)
+    return o[:, None].astype(r.dtype), state
+
+
+def wkv_apply(r, k, v, logw, u, state, chunk: int):
+    """Chunked WKV for any sequence length: full chunks via the parallel form,
+    the remainder via a per-token scan (remainder < chunk, cheap)."""
+    b, s, h, d = r.shape
+    s_main = (s // chunk) * chunk
+    outs = []
+    if s_main:
+        o1, state = wkv_chunked(r[:, :s_main], k[:, :s_main], v[:, :s_main],
+                                logw[:, :s_main], u, state, chunk)
+        outs.append(o1)
+    if s > s_main:
+        xs = tuple(t[:, s_main:].astype(jnp.float32).transpose(1, 0, 2, 3)
+                   for t in (r, k, v, logw))
+        uf = u.astype(jnp.float32)
+
+        def step(S, inp):
+            rr, kk, vv, ww = inp
+            o, S = _wkv_step(rr, kk, vv, ww, uf, S)
+            return S, o
+
+        state, otail = jax.lax.scan(step, state.astype(jnp.float32), xs)
+        outs.append(otail.transpose(1, 0, 2, 3).astype(r.dtype))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0], state
+
+
+def timemix_apply(p, x, cfg, scheme, seed, layer, *, state=None, prev=None):
+    """RWKV-6 time-mix. state: (B,H,d,d) or None; prev: (B,1,D) last token."""
+    b, s, dm = x.shape
+    hd = cfg.rwkv.head_dim
+    h = dm // hd
+    shifted = _shift(x, prev)
+    xm = _mix_inputs(p, x, shifted)
+    xr, xk, xv, xw, xg = [xm[:, :, i] for i in range(5)]
+    r = qlinear(xr, p["wr"], site_seed(seed, layer, 0), scheme).reshape(b, s, h, hd)
+    k = qlinear(xk, p["wk"], site_seed(seed, layer, 1), scheme).reshape(b, s, h, hd)
+    v = qlinear(xv, p["wv"], site_seed(seed, layer, 2), scheme).reshape(b, s, h, hd)
+    g = qlinear(xg, p["wg"], site_seed(seed, layer, 3), scheme)
+    logw = _decay(p, xw).reshape(b, s, h, hd)
+    u = p["u"].reshape(h, hd)
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    if s == 1:
+        o, state = wkv_decode(r, k, v, logw, u, state)
+    else:
+        o, state = wkv_apply(r, k, v, logw, u, state, cfg.rwkv.chunk)
+    # per-head groupnorm then gate
+    o = rmsnorm(o, p["gn"].reshape(h, hd), cfg.norm_eps).reshape(b, s, dm)
+    o = o * jax.nn.silu(g.astype(jnp.float32)).astype(o.dtype)
+    out = qlinear(o, p["wo"], site_seed(seed, layer, 4), scheme)
+    return out, state, x[:, -1:]
+
+
+def channelmix_apply(p, x, cfg, scheme, seed, layer, *, prev=None):
+    """RWKV-6 channel-mix (the FFN analogue)."""
+    shifted = _shift(x, prev)
+    xx = shifted - x
+    xk = x + xx * p["cm_mu"][0].astype(x.dtype)
+    xr = x + xx * p["cm_mu"][1].astype(x.dtype)
+    k = qlinear(xk, p["cm_wk"], site_seed(seed, layer, 5), scheme)
+    k = (jax.nn.relu(k.astype(jnp.float32)) ** 2).astype(x.dtype)
+    v = qlinear(k, p["cm_wv"], site_seed(seed, layer, 6), scheme)
+    r = qlinear(xr, p["cm_wr"], site_seed(seed, layer, 7), scheme)
+    return jax.nn.sigmoid(r.astype(jnp.float32)).astype(x.dtype) * v, x[:, -1:]

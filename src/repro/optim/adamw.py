@@ -1,0 +1,54 @@
+"""AdamW with fp32 state (paper Table 4: FP32 optimizer/accumulators) and
+decoupled weight decay. Pure-pytree implementation: state sharding follows
+parameter sharding under pjit (ZeRO-by-construction)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+def init(params) -> AdamWState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), z,
+                      jax.tree.map(jnp.copy, z))
+
+
+def update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
+           eps=1e-8, weight_decay=0.1):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * gf * gf
+        mh = m / (1 - b1 ** t)
+        vh = v / (1 - b2 ** t)
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return m, v, (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    mu = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, AdamWState(step, mu, nu)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), n

@@ -1,0 +1,84 @@
+"""Muon (Jordan et al. 2024): momentum + Newton-Schulz orthogonalization for
+2D hidden-layer weights; AdamW handles everything else (embeddings, norms,
+heads). >2D leaves (scan-stacked layers, per-expert weights) are treated
+matrix-wise over their last two dims — Newton-Schulz batches over leading dims.
+
+Used by the nanochat-style reproduction (paper Sec. 6.2)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+
+NS_COEFFS = (3.4445, -4.7750, 2.0315)
+NS_STEPS = 5
+
+
+def newton_schulz(g: jax.Array, steps: int = NS_STEPS) -> jax.Array:
+    """Approximate UV^T of the matrix (last two dims; leading dims batched)."""
+    a, b, c = NS_COEFFS
+    x = g.astype(jnp.float32)
+    transpose = x.shape[-2] > x.shape[-1]
+    if transpose:
+        x = x.swapaxes(-1, -2)
+    x = x / (jnp.linalg.norm(x, axis=(-2, -1), keepdims=True) + 1e-7)
+    for _ in range(steps):
+        s = x @ x.swapaxes(-1, -2)
+        x = a * x + (b * s + c * (s @ s)) @ x
+    if transpose:
+        x = x.swapaxes(-1, -2)
+    return x
+
+
+class MuonState(NamedTuple):
+    step: jax.Array
+    mom: dict                # momentum (used only on matrix params)
+    adam: adamw.AdamWState   # for non-matrix params
+
+
+def partition_mask(params):
+    """pytree of *static* bools: True -> Muon, False -> AdamW."""
+    def walk(path, p):
+        name = "/".join(str(k) for k in path).lower()
+        if p.ndim < 2:
+            return False
+        return not any(t in name for t in ("embed", "head"))
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+def init(params) -> MuonState:
+    return MuonState(jnp.zeros((), jnp.int32),
+                     jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                     adamw.init(params))
+
+
+def update(grads, state: MuonState, params, *, lr, momentum=0.95,
+           adam_lr_scale=0.3, weight_decay=0.0):
+    mask = partition_mask(params)
+    step = state.step + 1
+
+    def muon_upd(g, m, p, use):
+        if not use:  # static decision — no traced branching
+            return (m, p)
+        gf = g.astype(jnp.float32)
+        m = momentum * m + gf
+        upd = newton_schulz(momentum * m + gf)  # nesterov-style
+        scale = jnp.sqrt(jnp.maximum(1.0, p.shape[-2] / p.shape[-1])) * 0.2
+        newp = (p.astype(jnp.float32) - lr * scale * upd
+                - lr * weight_decay * p.astype(jnp.float32))
+        return (m, newp.astype(p.dtype))
+
+    out = jax.tree.map(muon_upd, grads, state.mom, params, mask)
+    mom = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    p_muon = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+
+    p_adam, adam_state = adamw.update(grads, state.adam, params,
+                                      lr=lr * adam_lr_scale,
+                                      weight_decay=weight_decay)
+    new_params = jax.tree.map(lambda pm, pa, u: pm if u else pa,
+                              p_muon, p_adam, mask)
+    return new_params, MuonState(step, mom, adam_state)

@@ -1,0 +1,31 @@
+"""LR schedules: cosine with warmup (paper Table 4) and WSD (nanochat Sec. 6.2)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, base_lr: float, total_steps: int, warmup_frac: float = 0.1,
+                  final_frac: float = 0.0):
+    warm = max(int(total_steps * warmup_frac), 1)
+    s = jnp.asarray(step, jnp.float32)
+    wu = s / warm
+    prog = jnp.clip((s - warm) / max(total_steps - warm, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.where(s < warm, wu, cos)
+
+
+def wsd(step, *, base_lr: float, total_steps: int, warmup_frac: float = 0.02,
+        decay_frac: float = 0.2):
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, flat, linear decay tail."""
+    warm = max(int(total_steps * warmup_frac), 1)
+    decay_start = int(total_steps * (1 - decay_frac))
+    s = jnp.asarray(step, jnp.float32)
+    wu = s / warm
+    dec = 1.0 - (s - decay_start) / max(total_steps - decay_start, 1)
+    lr = jnp.where(s < warm, wu, jnp.where(s < decay_start, 1.0, jnp.clip(dec, 0.0, 1.0)))
+    return base_lr * lr
+
+
+def get(name: str):
+    return {"cosine": warmup_cosine, "wsd": wsd}[name]

@@ -1,0 +1,54 @@
+"""Serving entry points: prefill and single-token decode steps.
+
+`serve_step` is what decode_32k / long_500k lower: one new token against a
+pre-allocated KV/state cache at a traced position. Forward quantization
+(RTN + 4/6) is deterministic, so serving needs no per-step randomness — the
+seed below is a fixed constant feeding the (unused-in-inference) backward.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+
+_SEED = jnp.array([7, 7], jnp.uint32)
+
+
+def make_prefill_step(cfg, scheme: str):
+    def prefill_step(params, cache, batch):
+        logits, cache, _ = lm.forward(params, cfg, batch, scheme,
+                                      jnp.asarray(_SEED), caches=cache,
+                                      mode="prefill")
+        return logits, cache
+    return prefill_step
+
+
+def make_serve_step(cfg, scheme: str):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache, _ = lm.forward(params, cfg, {"tokens": tokens}, scheme,
+                                      jnp.asarray(_SEED), caches=cache,
+                                      mode="decode", pos=pos)
+        return logits, cache
+    return serve_step
+
+
+def greedy_generate(params, cfg, scheme, prompt_tokens, max_new: int,
+                    max_len: int | None = None):
+    """Simple host-side generation loop (examples / tests)."""
+    b, s = prompt_tokens.shape
+    max_len = max_len or (s + max_new + 8)
+    if cfg.enc_dec:
+        raise NotImplementedError("use explicit enc-dec path in examples")
+    cache = lm.init_cache(cfg, b, max_len)
+    prefill = jax.jit(make_prefill_step(cfg, scheme))
+    step = jax.jit(make_serve_step(cfg, scheme))
+    logits, cache = prefill(params, cache, {"tokens": prompt_tokens})
+    tok = jnp.argmax(logits[:, -1:], axis=-1)
+    out = [tok]
+    for i in range(max_new - 1):
+        logits, cache = step(params, cache, tok, jnp.int32(s + i))
+        tok = jnp.argmax(logits[:, -1:], axis=-1)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

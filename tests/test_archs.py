@@ -1,0 +1,186 @@
+"""Per-architecture smoke tests (assignment requirement): reduced same-family
+configs, one forward/train step on CPU, shape + no-NaN assertions, and
+decode-vs-full-forward consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+from repro.models import lm
+
+SEED = jnp.array([1, 2], jnp.uint32)
+ARCHS = registry.names()
+
+
+def make_batch(cfg, key, b=2, s=16):
+    batch = {}
+    if cfg.input_mode == "embeds":
+        batch["embeds"] = jax.random.normal(key, (b, s, cfg.d_model), jnp.bfloat16) * 0.3
+    if cfg.enc_dec or cfg.input_mode == "tokens":
+        batch["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    batch["labels"] = jax.random.randint(jax.random.fold_in(key, 1), (b, s), 0, cfg.vocab)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_loads(arch):
+    cfg = registry.get(arch)
+    assert cfg.d_model % 16 == 0 and cfg.vocab > 0
+    specs = lm.layer_specs(cfg)
+    n = sum(len(pat) * count for pat, count in specs)
+    assert n == cfg.n_layers, (arch, n, cfg.n_layers)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """One forward + one quantized train step on the reduced config."""
+    cfg = registry.get(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init(cfg, key)
+    batch = make_batch(cfg, key)
+
+    logits, _, aux = lm.forward(params, cfg, batch, "quartet2", SEED, mode="train")
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+    loss, grads = jax.value_and_grad(
+        lambda p: lm.lm_loss(p, cfg, batch, "quartet2", SEED))(params)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(not bool(jnp.isnan(g.astype(jnp.float32)).any()) for g in flat)
+    # gradient reaches every parameter group (embeddings via labels, mixers, ffs)
+    nonzero = sum(float(jnp.abs(g.astype(jnp.float32)).sum()) > 0 for g in flat)
+    assert nonzero / len(flat) > 0.9, f"{arch}: only {nonzero}/{len(flat)} grads nonzero"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_full_forward(arch):
+    """Prefill+decode logits == full-forward logits (bf16 tolerance).
+
+    MoE archs use a generous capacity factor: capacity dropping is batch-
+    dependent by construction, exactness only holds when nothing drops.
+    """
+    cfg = registry.get(arch).reduced()
+    if cfg.moe:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    key = jax.random.PRNGKey(0)
+    params = lm.init(cfg, key)
+    b, s, extra = 2, 16, 3
+    toks = jax.random.randint(key, (b, s + extra), 0, cfg.vocab)
+    emb = jax.random.normal(key, (b, s + extra, cfg.d_model), jnp.bfloat16) * 0.3
+
+    if cfg.enc_dec:
+        full_in = {"embeds": emb, "tokens": toks}
+        pf_in = {"embeds": emb, "tokens": toks[:, :s]}
+        cache = lm.init_encdec_cache(cfg, b, s + 8, enc_len=s + extra)
+    elif cfg.input_mode == "embeds":
+        pytest.skip("vlm decode generates from tokens; prefill checked in smoke")
+    else:
+        full_in = {"tokens": toks}
+        pf_in = {"tokens": toks[:, :s]}
+        cache = lm.init_cache(cfg, b, s + 8)
+
+    full, _, _ = lm.forward(params, cfg, full_in, "bf16", SEED, mode="train")
+    pf, cache, _ = lm.forward(params, cfg, pf_in, "bf16", SEED, caches=cache, mode="prefill")
+    tol = 0.05 * float(jnp.max(jnp.abs(full.astype(jnp.float32))))
+    assert float(jnp.max(jnp.abs(pf.astype(jnp.float32) - full[:, :s].astype(jnp.float32)))) < tol
+    for step in range(extra):
+        dl, cache, _ = lm.forward(params, cfg, {"tokens": toks[:, s + step: s + step + 1]},
+                                  "bf16", SEED, caches=cache, mode="decode", pos=s + step)
+        err = float(jnp.max(jnp.abs(dl[:, 0].astype(jnp.float32)
+                                    - full[:, s + step].astype(jnp.float32))))
+        assert err < tol, (arch, step, err)
+
+
+@pytest.mark.parametrize("arch", ["rwkv6_7b", "recurrentgemma_9b"])
+def test_subquadratic_flag(arch):
+    assert registry.get(arch).subquadratic
+
+
+def test_quadratic_archs_skip_long():
+    for a in ARCHS:
+        cfg = registry.get(a)
+        if a in ("rwkv6_7b", "recurrentgemma_9b"):
+            continue
+        assert not cfg.subquadratic
+
+
+def test_rwkv_chunked_matches_stepwise():
+    """Chunk-parallel WKV == naive per-token recurrence."""
+    from repro.models import rwkv6 as W
+    b, s, h, d = 2, 24, 2, 16
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    r, k, v = (jax.random.normal(ks[i], (b, s, h, d)) for i in range(3))
+    logw = -jnp.abs(jax.random.normal(ks[3], (b, s, h, d))) - 0.05
+    logw = jnp.clip(logw, W.LOG_W_MIN, -1e-4)
+    u = jax.random.normal(ks[4], (h, d)) * 0.1
+    state = jnp.zeros((b, h, d, d))
+
+    out_c, st_c = W.wkv_apply(r, k, v, logw, u, state, chunk=8)
+
+    outs, st = [], state
+    for t in range(s):
+        o, st = W.wkv_decode(r[:, t:t+1], k[:, t:t+1], v[:, t:t+1],
+                             logw[:, t:t+1], u, st)
+        outs.append(o)
+    out_s = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_s), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_c), np.asarray(st), rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_scan_matches_stepwise():
+    from repro.models import griffin as G
+    from repro.configs.base import ArchConfig, GriffinConfig
+    cfg = registry.get("recurrentgemma_9b").reduced()
+    p = G.rglru_init(jax.random.PRNGKey(0), cfg)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 128), jnp.float32)
+    full = G.rglru_scan(p, u)
+    h = jnp.zeros((2, 128), jnp.float32)
+    outs = []
+    for t in range(12):
+        o, h = G.rglru_step(p, u[:, t:t+1], h)
+        outs.append(o)
+    step = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(full, np.float32),
+                               np.asarray(step, np.float32), rtol=3e-3, atol=3e-3)
+
+
+def test_chunked_sdpa_matches_plain():
+    """Online-softmax == plain SDPA (causal + windowed)."""
+    from repro.models import attention as A
+    key = jax.random.PRNGKey(0)
+    b, s, h, kv, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, hd))
+    import repro.models.attention as attn
+    old_q, old_k = attn.Q_BLOCK, attn.KV_BLOCK
+    attn.Q_BLOCK, attn.KV_BLOCK = 16, 16
+    try:
+        for window in (None, 24):
+            ref = A.sdpa(q, k, v, causal=True, window=window)
+            out = A.chunked_sdpa(q, k, v, causal=True, window=window)
+            np.testing.assert_allclose(np.asarray(out, np.float32),
+                                       np.asarray(ref, np.float32), atol=2e-3)
+    finally:
+        attn.Q_BLOCK, attn.KV_BLOCK = old_q, old_k
+
+
+def test_moe_capacity_flops_are_sparse():
+    """The dispatch buffer is (E, C, D) with C ~ T*k/E — never T x E dense."""
+    from repro.models.moe import _capacity
+    cfg = registry.get("deepseek_v3_671b")
+    c = _capacity(256 * 4096, cfg)
+    assert c <= int(256 * 4096 * 8 / 256 * 1.25) + 8
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["long_500k"].seq_len == 524_288

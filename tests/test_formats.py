@@ -1,0 +1,107 @@
+"""Unit + property tests for the scalar format primitives."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestFP4:
+    def test_grid_roundtrip(self):
+        vals = np.concatenate([F.FP4_GRID, -F.FP4_GRID])
+        x = jnp.asarray(vals)
+        assert np.allclose(F.fp4_rtn(x), vals)
+        codes = F.fp4_code(x)
+        assert np.allclose(F.fp4_decode(codes), vals)
+
+    def test_rtn_nearest(self):
+        x = jnp.asarray([0.2, 0.3, 0.7, 1.2, 2.4, 2.6, 3.6, 4.9, 5.1, 100.0])
+        expect = [0.0, 0.5, 0.5, 1.0, 2.0, 3.0, 4.0, 4.0, 6.0, 6.0]
+        assert np.allclose(F.fp4_rtn(x), expect)
+        assert np.allclose(F.fp4_rtn(-x), [-e for e in expect])
+
+    def test_rtn_ties_to_even(self):
+        # midpoints: .25->0, .75->1, 2.5->2, 3.5->4, 5->4
+        x = jnp.asarray([0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0])
+        assert np.allclose(F.fp4_rtn(x), [0.0, 1.0, 1.0, 2.0, 2.0, 4.0, 4.0])
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.floats(-6, 6), st.integers(0, 2**31 - 1))
+    def test_sr_lands_on_neighbours(self, v, seed):
+        """Every SR draw is one of the two grid points bracketing v."""
+        x = jnp.full((64,), v, jnp.float32)
+        q = np.asarray(F.fp4_sr(x, jax.random.PRNGKey(seed)))
+        mag = abs(v)
+        lo = F.FP4_GRID[F.FP4_GRID <= mag + 1e-7].max()
+        hi = F.FP4_GRID[F.FP4_GRID >= mag - 1e-7].min()
+        allowed = {np.sign(v) * lo, np.sign(v) * hi} if v else {0.0}
+        assert all(any(np.isclose(qi, a) for a in allowed) for qi in q), \
+            (v, set(np.unique(q)), allowed)
+
+    def test_sr_unbiased(self):
+        x = jax.random.uniform(jax.random.PRNGKey(0), (512,), minval=-6, maxval=6)
+        qs = jax.vmap(lambda i: F.fp4_sr(x, jax.random.PRNGKey(i)))(jnp.arange(4096))
+        bias = jnp.abs(jnp.mean(qs, 0) - x)
+        assert float(jnp.max(bias)) < 0.05  # MC tolerance
+
+
+class TestFP8:
+    def test_rtn_matches_dtype_cast(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (1024,)) * 100
+        ref = jnp.clip(x, -448, 448).astype(jnp.float8_e4m3fn).astype(jnp.float32)
+        assert np.array_equal(np.asarray(F.fp8_rtn(x)), np.asarray(ref))
+
+    def test_rtn_margin(self):
+        # RTN_FP8 increases values by at most 17/16 -> margin constant 16/17
+        x = jnp.linspace(0.01, 440.0, 100001)
+        r = F.fp8_rtn(x)
+        ratio = np.asarray(r) / np.asarray(x)
+        assert ratio.max() <= 1.0 / F.FP8_RTN_MARGIN + 1e-6
+
+    def test_sr_pos_on_lattice_and_unbiased(self):
+        v = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (256,))) * 50 + 0.5
+        q = F.fp8_sr_pos(v, jax.random.PRNGKey(2))
+        # every output is exactly representable in e4m3
+        assert np.array_equal(
+            np.asarray(q), np.asarray(q.astype(jnp.float8_e4m3fn).astype(jnp.float32)))
+        qs = jax.vmap(lambda i: F.fp8_sr_pos(v, jax.random.PRNGKey(i)))(jnp.arange(4096))
+        rel = jnp.abs(jnp.mean(qs, 0) - v) / v
+        assert float(jnp.max(rel)) < 0.01
+
+    def test_sr_pos_exact_values_stay(self):
+        exact = jnp.asarray([0.0, 1.0, 1.5, 448.0, 0.25])
+        q = F.fp8_sr_pos(exact, jax.random.PRNGKey(0))
+        assert np.array_equal(np.asarray(q), np.asarray(exact))
+
+
+class TestE8M3:
+    def test_mantissa_3_bits(self):
+        x = jnp.asarray([1.0 + i / 64 for i in range(64)])
+        q = np.asarray(F.e8m3_rtn(x))
+        # representable values between 1 and 2 step 1/8
+        assert np.allclose(q * 8, np.round(q * 8))
+
+    def test_extended_range(self):
+        # values way beyond FP8_MAX survive (no overflow) — the ER property
+        x = jnp.asarray([1e6, 3e-6, 448.0, 70000.0])
+        q = np.asarray(F.e8m3_rtn(x))
+        assert np.all(np.isfinite(q)) and q[0] > 9e5
+        # and bf16 storage is exact
+        assert np.array_equal(q, np.asarray(jnp.asarray(q).astype(jnp.bfloat16).astype(jnp.float32)))
+
+
+class TestPacking:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([16, 64, 128, 256]))
+    def test_roundtrip(self, seed, d):
+        codes = jax.random.randint(jax.random.PRNGKey(seed), (8, d), 0, 16, jnp.uint8)
+        assert np.array_equal(np.asarray(F.unpack_fp4(F.pack_fp4(codes))), np.asarray(codes))
+
+    def test_wire_size(self):
+        codes = jnp.zeros((4, 256), jnp.uint8)
+        assert F.pack_fp4(codes).size * 8 == codes.size * 4  # 4 bits/element

@@ -1,0 +1,95 @@
+"""Pipeline parallelism: GPipe schedule == sequential stage application."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.dist.pipeline import bubble_fraction, stack_stage_params
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(4, 12) == pytest.approx(3 / 15)
+    assert bubble_fraction(1, 8) == 0.0
+
+
+def test_stack_stage_params():
+    import jax.numpy as jnp
+    p = {"w": jnp.arange(24).reshape(8, 3)}
+    s = stack_stage_params(p, 4)
+    assert s["w"].shape == (4, 2, 3)
+
+
+def test_gpipe_matches_sequential():
+    """4-stage pipe on 4 virtual devices == applying the 4 stages in order
+    (subprocess: the test env exposes a single device)."""
+    code = textwrap.dedent('''
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.dist.pipeline import gpipe
+
+        S, M, MB, D = 4, 8, 2, 16
+        mesh = Mesh(np.asarray(jax.devices()), ("pipe",))
+        ws = jax.random.normal(jax.random.PRNGKey(0), (S, D, D)) / np.sqrt(D)
+        xs = jax.random.normal(jax.random.PRNGKey(1), (M, MB, D))
+
+        def stage_fn(w, x):
+            return jnp.tanh(x @ w)
+
+        run = gpipe(stage_fn, n_stages=S, n_micro=M)
+        f = jax.jit(shard_map(run, mesh=mesh,
+                              in_specs=(P("pipe"), P()), out_specs=P(),
+                              check_vma=False))
+        got = f(ws, xs)
+
+        want = xs
+        for s in range(S):
+            want = jnp.tanh(want @ ws[s])
+        err = float(jnp.max(jnp.abs(got - want)))
+        assert err < 1e-5, err
+        print("OK", err)
+    ''')
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, cwd=os.getcwd())
+    assert r.returncode == 0 and "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_gpipe_compressed_boundary():
+    """NVFP4-compressed stage boundaries stay within quantization tolerance."""
+    code = textwrap.dedent('''
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.dist.pipeline import gpipe
+
+        S, M, MB, D = 4, 4, 2, 32
+        mesh = Mesh(np.asarray(jax.devices()), ("pipe",))
+        ws = jax.random.normal(jax.random.PRNGKey(0), (S, D, D)) / np.sqrt(D)
+        xs = jax.random.normal(jax.random.PRNGKey(1), (M, MB, D))
+        stage_fn = lambda w, x: jnp.tanh(x @ w)
+        f = jax.jit(shard_map(gpipe(stage_fn, S, M, compress=True), mesh=mesh,
+                              in_specs=(P("pipe"), P()), out_specs=P(),
+                              check_vma=False))
+        got = f(ws, xs)
+        want = xs
+        for s in range(S):
+            want = jnp.tanh(want @ ws[s])
+        rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+        # ~9.5% RTN rel-err per NVFP4 boundary x 3 hops, partially damped by
+        # tanh: bounded but aggressive (FP8 boundaries are the usual choice;
+        # FP4 shown here for the wire-format plumbing)
+        assert rel < 0.30, rel
+        print("OK", rel)
+    ''')
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, cwd=os.getcwd())
+    assert r.returncode == 0 and "OK" in r.stdout, r.stdout + r.stderr

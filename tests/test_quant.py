@@ -1,0 +1,193 @@
+"""Quantizer tests, including the paper's Table 1 MSE reproduction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+from repro.core import ms_eden as ME
+from repro.core import quant as Q
+from repro.core import rht as R
+
+
+@pytest.fixture(scope="module")
+def gauss():
+    return jax.random.normal(jax.random.PRNGKey(0), (2048, 1024), jnp.float32)
+
+
+class TestTable1:
+    """Paper Table 1: quadratic error over N(0,1), MSE x 1e-3.
+
+    | RTN 1x16 | 9.0 |  | +4/6 | 7.6 |  | RTN 16x16 | 12.4 |
+    | SR 1x16  | 23.5 |  | MS-EDEN | 9.4 |
+    (tolerances cover sampling noise and grid-placement minutiae)
+    """
+
+    def test_rtn_1x16(self, gauss):
+        m = float(Q.mse(gauss, Q.quant_rtn(gauss, s=Q.S_EDEN))) * 1e3
+        assert 8.0 < m < 10.0, m
+
+    def test_rtn_4over6(self, gauss):
+        m = float(Q.mse(gauss, Q.quant_four_over_six(gauss))) * 1e3
+        assert 6.8 < m < 8.4, m
+
+    def test_rtn_square(self, gauss):
+        m = float(Q.mse(gauss, Q.quant_square_block(gauss))) * 1e3
+        assert 11.0 < m < 14.5, m
+
+    def test_sr_1x16(self, gauss):
+        m = float(Q.mse(gauss, Q.quant_sr(gauss, jax.random.PRNGKey(1)))) * 1e3
+        assert 21.0 < m < 26.0, m
+
+    def test_ms_eden(self, gauss):
+        out = ME.ms_eden(gauss, jax.random.PRNGKey(2), jax.random.PRNGKey(3))
+        deq = ME.ms_eden_dequant(out, rotated=False)
+        m = float(jnp.mean((deq - gauss) ** 2)) * 1e3
+        assert 8.4 < m < 10.6, m
+
+    def test_ordering(self, gauss):
+        """The paper's headline: MS-EDEN is unbiased with >2x lower MSE than SR."""
+        sr = float(Q.mse(gauss, Q.quant_sr(gauss, jax.random.PRNGKey(1))))
+        out = ME.ms_eden(gauss, jax.random.PRNGKey(2), jax.random.PRNGKey(3))
+        eden = float(jnp.mean((ME.ms_eden_dequant(out, rotated=False) - gauss) ** 2))
+        assert sr > 2.0 * eden
+
+
+class TestQuantizerInvariants:
+    SCHEMES = {
+        "rtn": lambda x: Q.quant_rtn(x),
+        "rtn_clip": lambda x: Q.quant_rtn(x, s=Q.S_EDEN),
+        "fos": Q.quant_four_over_six,
+        "sr": lambda x: Q.quant_sr(x, jax.random.PRNGKey(7)),
+    }
+
+    @pytest.mark.parametrize("name", sorted(SCHEMES))
+    def test_scales_on_e4m3_grid(self, gauss, name):
+        qt = self.SCHEMES[name](gauss[:64])
+        s = np.asarray(qt.scales)
+        assert np.array_equal(
+            s, np.asarray(jnp.asarray(s).astype(jnp.float8_e4m3fn).astype(jnp.float32)))
+
+    @pytest.mark.parametrize("name", sorted(SCHEMES))
+    def test_codes_in_range(self, gauss, name):
+        qt = self.SCHEMES[name](gauss[:64])
+        assert int(qt.codes.max()) <= 15
+
+    @pytest.mark.parametrize("name", sorted(SCHEMES))
+    def test_zero_tensor(self, name):
+        qt = self.SCHEMES[name](jnp.zeros((8, 64)))
+        assert np.array_equal(np.asarray(Q.dequant(qt)), np.zeros((8, 64), np.float32))
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.floats(1e-4, 1e4))
+    def test_scale_invariance(self, seed, scale):
+        """Quantization relative error is invariant to per-tensor scaling."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (16, 128))
+        a = Q.dequant(Q.quant_rtn(x))
+        b = Q.dequant(Q.quant_rtn(x * scale))
+        assert np.allclose(np.asarray(a) * scale, np.asarray(b), rtol=1e-4, atol=1e-6 * scale)
+
+    def test_sr_never_clips(self):
+        """Q_SR constants guarantee |x / (s_g * gscale)| <= 6 (unbiasedness)."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (256, 64)) ** 3  # heavy tails
+        qt = Q.quant_sr(x, jax.random.PRNGKey(1))
+        denom = jnp.repeat(qt.scales, F.GROUP, -1) * qt.gscale
+        ratio = jnp.abs(x) / jnp.where(denom == 0, 1.0, denom)
+        assert float(ratio.max()) <= 6.0 + 1e-5
+
+    def test_square_block_scale_sharing(self, gauss):
+        qt = Q.quant_square_block(gauss[:64, :64])
+        s = np.asarray(qt.scales).reshape(4, 16, 4)
+        assert (s == s[:, :1, :]).all()  # 16 rows of a tile share the scale
+
+
+class TestRHT:
+    def test_orthogonal(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (32, 384))
+        k = jax.random.PRNGKey(5)
+        y = R.rht(x, k)
+        assert np.allclose(np.asarray(R.rht_inv(y, k)), np.asarray(x), atol=1e-4)
+        assert np.isclose(float(jnp.linalg.norm(y)), float(jnp.linalg.norm(x)), rtol=1e-5)
+
+    def test_block_size_selection(self):
+        assert R.block_size(1024) == 128
+        assert R.block_size(1408) == 128
+        assert R.block_size(192) == 64
+        assert R.block_size(48) == 16
+        with pytest.raises(ValueError):
+            R.block_size(40)
+
+    def test_gemm_cancellation(self):
+        """(A @ DH)(B @ DH)^T == A B^T — why no inverse rotation is needed."""
+        a = jax.random.normal(jax.random.PRNGKey(0), (16, 256))
+        b = jax.random.normal(jax.random.PRNGKey(1), (24, 256))
+        k = jax.random.PRNGKey(2)
+        ref = a @ b.T
+        rot = R.rht(a, k) @ R.rht(b, k).T
+        assert np.allclose(np.asarray(rot), np.asarray(ref), atol=1e-3)
+
+
+class TestMSEden:
+    def test_unbiased_after_inverse_rotation(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (32, 128)) * 0.5
+
+        def draw(i):
+            k = jax.random.PRNGKey(i)
+            o = ME.ms_eden(x, jax.random.fold_in(k, 0), jax.random.fold_in(k, 1))
+            return ME.ms_eden_dequant(o, rotated=False)
+
+        avg = jnp.mean(jax.vmap(draw)(jnp.arange(2048)), 0)
+        rel = float(jnp.linalg.norm(avg - x) / jnp.linalg.norm(x))
+        assert rel < 0.01, rel
+
+    def test_lower_variance_than_sr(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (64, 256))
+
+        def eden_err(i):
+            k = jax.random.PRNGKey(i)
+            o = ME.ms_eden(x, jax.random.fold_in(k, 0), jax.random.fold_in(k, 1))
+            d = ME.ms_eden_dequant(o, rotated=False) - x
+            return jnp.sum(d * d)
+
+        def sr_err(i):
+            d = Q.dequant(Q.quant_sr(x, jax.random.PRNGKey(i))) - x
+            return jnp.sum(d * d)
+
+        e = float(jnp.mean(jax.vmap(eden_err)(jnp.arange(64))))
+        s = float(jnp.mean(jax.vmap(sr_err)(jnp.arange(64))))
+        assert s > 2.0 * e, (s, e)
+
+    def test_posthoc_matches_direct_statistically(self):
+        """ER-NVFP4 post-hoc path is a valid MS-EDEN: unbiased, similar MSE."""
+        x = jax.random.normal(jax.random.PRNGKey(9), (64, 256))
+
+        def draw(i):
+            k = jax.random.PRNGKey(i)
+            p1 = ME.ms_eden_phase1(x, jax.random.fold_in(k, 0))
+            qt = ME.ms_eden_phase2(p1, jax.random.fold_in(k, 1))
+            return R.rht_inv(Q.dequant(qt), jax.random.fold_in(k, 0))
+
+        samples = jax.vmap(draw)(jnp.arange(1024))
+        avg = jnp.mean(samples, 0)
+        rel = float(jnp.linalg.norm(avg - x) / jnp.linalg.norm(x))
+        assert rel < 0.02, rel
+        mse = float(jnp.mean((samples[0] - x) ** 2))
+        assert mse < 2.2e-2  # same ballpark as direct path on N(0,1)
+
+    def test_scales_within_fp8_after_correction(self):
+        """FP8 cap 256 leaves room for the EDEN up-correction (Sec. 3.3)."""
+        x = jax.random.normal(jax.random.PRNGKey(4), (128, 256)) ** 3
+        o = ME.ms_eden(x, jax.random.PRNGKey(0), jax.random.PRNGKey(1))
+        assert float(o.qt.scales.max()) <= F.FP8_MAX
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1),
+           st.sampled_from([(8, 64), (16, 128), (4, 1408), (32, 384)]))
+    def test_shape_dtype_sweep(self, seed, shape):
+        x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+        for dt in (jnp.float32, jnp.bfloat16):
+            o = ME.ms_eden(x.astype(dt), jax.random.PRNGKey(0), jax.random.PRNGKey(1))
+            v = ME.ms_eden_dequant(o, rotated=False)
+            assert v.shape == shape and not bool(jnp.isnan(v).any())
