@@ -4,6 +4,21 @@ from __future__ import annotations
 
 import time
 
+# Set by `benchmarks.run --smoke`: every module must finish < 30s on CPU.
+# Modules consult `smoke_steps` / SMOKE to trim training-loop lengths.
+SMOKE = False
+
+
+def smoke_steps(n: int, floor: int = 20) -> int:
+    """Trim a training-step count for the --smoke CI path."""
+    return max(floor, n // 6) if SMOKE else n
+
+
+def smoke_bench_cfg():
+    """The --smoke bench model: one layer, tiny vocab — jit compile time is
+    the CPU bottleneck, and one layer still exercises every scheme path."""
+    return bench_cfg(d_model=128, n_layers=1, vocab=256, d_ff=256)
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -40,6 +55,9 @@ def train_curve(scheme: str, *, steps: int, cfg=None, seq=64, batch=8,
                 lr=2e-3, seed=0, eval_every=0):
     """Train the bench model under `scheme`; return final eval loss over a
     held-out split (deterministic across schemes: same data, same init)."""
+    if cfg is None and SMOKE:
+        cfg = smoke_bench_cfg()
+        seq, batch = 32, 4
     cfg = cfg or bench_cfg()
     corpus = SyntheticCorpus(DataConfig(vocab=cfg.vocab, seq_len=seq,
                                         global_batch=batch, seed=seed))

@@ -13,10 +13,14 @@ SCHEMES = ["bf16", "abl_a_sr", "abl_a_ms_eden", "abl_b_sr", "abl_c_sr",
 
 
 def run(quick: bool = True):
-    steps = 120 if quick else 600
+    from benchmarks import common
+    from benchmarks.common import smoke_steps
+    steps = smoke_steps(120 if quick else 600)
+    # --smoke: headline comparison only (compiles dominate CPU wall time)
+    schemes = ["bf16", "abl_e_ms_eden"] if common.SMOKE else SCHEMES
     rows = []
     base = None
-    for scheme in SCHEMES:
+    for scheme in schemes:
         loss = train_curve(scheme, steps=steps)
         if scheme == "bf16":
             base = loss

@@ -11,9 +11,13 @@ SCHEMES = ["bf16", "fwd_rtn_1x16", "fwd_rtn_1x16_fos", "fwd_square",
 
 
 def run(quick: bool = True):
-    steps = 120 if quick else 600
+    from benchmarks import common
+    from benchmarks.common import smoke_steps
+    steps = smoke_steps(120 if quick else 600)
+    # --smoke: headline comparison only (compiles dominate CPU wall time)
+    schemes = (["bf16", "fwd_rtn_1x16_fos"] if common.SMOKE else SCHEMES)
     rows, base = [], None
-    for scheme in SCHEMES:
+    for scheme in schemes:
         loss = train_curve(scheme, steps=steps)
         if scheme == "bf16":
             base = loss

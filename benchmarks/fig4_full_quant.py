@@ -10,10 +10,14 @@ SCHEMES = ["bf16", "nvidia", "tetrajet_v2", "four_over_six", "quartet2"]
 
 
 def run(quick: bool = True):
-    steps = 150 if quick else 800
+    from benchmarks import common
+    from benchmarks.common import smoke_steps
+    steps = smoke_steps(150 if quick else 800)
+    # --smoke: quartet2 vs one baseline (compiles dominate CPU wall time)
+    schemes = ["bf16", "quartet2"] if common.SMOKE else SCHEMES
     rows, base = [], None
     gaps = {}
-    for scheme in SCHEMES:
+    for scheme in schemes:
         loss = train_curve(scheme, steps=steps)
         if scheme == "bf16":
             base = loss

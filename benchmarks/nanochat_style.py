@@ -19,11 +19,15 @@ SCHEMES = ["bf16", "nvidia", "four_over_six", "tetrajet_v2", "quartet2"]
 
 
 def run(quick: bool = True):
-    steps = 120 if quick else 600
-    cfg = dataclasses.replace(bench_cfg(), qk_norm=True, mlp="relu2",
+    from benchmarks import common
+    from benchmarks.common import smoke_steps
+    steps = smoke_steps(120 if quick else 600)
+    schemes = (["bf16", "quartet2"] if common.SMOKE else SCHEMES)
+    base_cfg = common.smoke_bench_cfg() if common.SMOKE else bench_cfg()
+    cfg = dataclasses.replace(base_cfg, qk_norm=True, mlp="relu2",
                               name="nanochat-bench")
     rows, base = [], None
-    for scheme in SCHEMES:
+    for scheme in schemes:
         corpus = SyntheticCorpus(DataConfig(vocab=cfg.vocab, seq_len=64,
                                             global_batch=8, seed=11))
         init_state, train_step = make_train_step(

@@ -14,16 +14,24 @@ import traceback
 
 MODULES = ["table1_mse", "fig9_unbiasedness", "table2_bandwidth",
            "kernel_overhead", "fig2_forward_ablation",
-           "fig1_backward_ablation", "fig4_full_quant", "nanochat_style"]
+           "fig1_backward_ablation", "fig4_full_quant", "nanochat_style",
+           "serve_throughput"]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-closer sizes/steps (slow on CPU)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="<30s-per-module CPU path (CI): forces quick sizes "
+                         "and trims training steps via benchmarks.common.SMOKE")
     ap.add_argument("--only", default=None,
                     help="comma-separated module prefixes")
     args = ap.parse_args()
+    if args.smoke:
+        from benchmarks import common
+        common.SMOKE = True
+        args.full = False
     mods = MODULES
     if args.only:
         keys = args.only.split(",")

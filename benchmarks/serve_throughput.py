@@ -1,0 +1,123 @@
+"""Serving throughput: ServeEngine (continuous batching + paged KV pool +
+quantize-once NVFP4 weights) vs the seed fixed-batch greedy loop.
+
+Rows (tok/s = generated tokens per wall-second of decode):
+
+  serve/seed_loop          — serve/decode.py greedy_generate: fixed batch,
+                             dense cache, re-quantizes every weight per step
+  serve/engine_requant     — engine, per-step weight quantization (isolates
+                             the scheduler/pool overhead)
+  serve/engine_prequant    — engine with the quantize-once weight cache
+                             (the acceptance row: must beat seed_loop)
+  serve/engine_poisson     — engine under Poisson request arrival (open-loop
+                             traffic; includes prefill interleaving)
+
+CPU numbers are relative, like every bench in this harness.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import bench_cfg
+from repro.models import lm
+from repro.serve.decode import greedy_generate
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+
+def _workload(cfg, n_requests, prompt_len, seed=0):
+    rng = np.random.RandomState(seed)
+    return [list(map(int, rng.randint(0, cfg.vocab, prompt_len)))
+            for _ in range(n_requests)]
+
+
+def _seed_loop_toks(cfg, params, prompts, max_new, scheme):
+    """Seed baseline: one fixed batch, greedy loop; decode-phase tok/s."""
+    batch = jnp.asarray(prompts)
+    b = batch.shape[0]
+    # warm compile + measure: greedy_generate jits internally per call shape
+    greedy_generate(params, cfg, scheme, batch, 2)
+    t0 = time.perf_counter()
+    out = greedy_generate(params, cfg, scheme, batch, max_new)
+    jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    return b * max_new / dt, dt
+
+
+def _engine_toks(cfg, params, prompts, max_new, scheme, prequant,
+                 arrivals=None):
+    econf = EngineConfig(n_slots=len(prompts) if arrivals is None else 4,
+                         max_len=128, prefill_chunk=16, paged=True,
+                         prequant=prequant, scheme=scheme)
+    eng = ServeEngine(cfg, params, econf)
+    if arrivals is None:
+        for p in prompts:
+            eng.submit(Request(prompt=p, max_new=max_new))
+        # decode-phase tok/s: stats time only the decode-step device calls,
+        # so one-time jit compiles (prefill/decode shapes) are excluded the
+        # same way they are for the seed baseline's warmup call
+        eng.run()
+        st = eng.stats
+        return st["decode_tokens"] / max(st["decode_s"], 1e-9), st
+    # open-loop Poisson traffic: submit requests as wall-clock time passes
+    t0 = time.perf_counter()
+    pending = list(zip(arrivals, prompts))
+    done = 0
+    while pending or eng.has_work():
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            eng.submit(Request(prompt=pending.pop(0)[1], max_new=max_new))
+        if not eng.has_work():
+            time.sleep(min(0.005, max(pending[0][0] - now, 0.0)))
+            continue
+        done += len(eng.step())
+    wall = time.perf_counter() - t0
+    st = eng.stats
+    total = st["decode_tokens"] + st["prefill_tokens"]
+    return total / wall, st
+
+
+def run(quick: bool = True):
+    smoke = getattr(common, "SMOKE", False)
+    cfg = (common.smoke_bench_cfg() if smoke
+           else bench_cfg(d_model=256, n_layers=2, vocab=512, d_ff=512))
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    scheme = "quartet2"
+    batch = 4
+    max_new = 8 if smoke else (24 if quick else 64)
+    prompts = _workload(cfg, batch, prompt_len=16)
+
+    rows = []
+    seed_tps, _ = _seed_loop_toks(cfg, params, prompts, max_new, scheme)
+    rows.append(("serve/seed_loop", 1e6 / seed_tps,
+                 f"tok_s={seed_tps:.1f} batch={batch}"))
+
+    if not smoke:  # isolates scheduler overhead; skipped on the CI path
+        rq_tps, _ = _engine_toks(cfg, params, prompts, max_new, scheme,
+                                 prequant=False)
+        rows.append(("serve/engine_requant", 1e6 / rq_tps,
+                     f"tok_s={rq_tps:.1f} batch={batch}"))
+
+    pq_tps, _ = _engine_toks(cfg, params, prompts, max_new, scheme,
+                             prequant=True)
+    rows.append(("serve/engine_prequant", 1e6 / pq_tps,
+                 f"tok_s={pq_tps:.1f} batch={batch} "
+                 f"speedup_vs_seed={pq_tps / seed_tps:.2f}x"))
+
+    if not smoke:
+        n_req = 8 if quick else 32
+        rng = np.random.RandomState(7)
+        # Poisson arrivals: mean inter-arrival tuned to keep the pipe busy
+        arrivals = np.cumsum(rng.exponential(0.05, n_req)).tolist()
+        po_prompts = _workload(cfg, n_req, prompt_len=16, seed=7)
+        po_tps, st = _engine_toks(cfg, params, po_prompts, max_new, scheme,
+                                  prequant=True, arrivals=arrivals)
+        rows.append(("serve/engine_poisson", 1e6 / max(po_tps, 1e-9),
+                     f"tok_s={po_tps:.1f} requests={n_req} "
+                     f"slots=4 finished={st['finished']}"))
+    return rows

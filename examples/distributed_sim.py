@@ -16,7 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.dist import shard_map  # version-compat wrapper
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import registry
@@ -34,8 +34,8 @@ def main():
                     help="NVFP4 MS-EDEN gradient all-reduce on the DP axis")
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     cfg = registry.get("llama_200m").reduced()
     corpus = SyntheticCorpus(DataConfig(vocab=cfg.vocab, seq_len=64,
                                         global_batch=8))

@@ -1,7 +1,11 @@
-"""Serve a small model with batched requests: NVFP4 forward (4/6), KV-cache
-prefill + greedy decode.
+"""Serve a small model through the continuous-batching engine: NVFP4 forward
+(4/6), quantize-once packed weights, paged KV pool, interleaved chunked
+prefill + batched decode.
 
     PYTHONPATH=src python examples/serve_decode.py [--arch yi_9b] [--tokens 32]
+
+`--legacy` runs the old fixed-batch greedy loop instead (the baseline the
+benchmark compares against).
 """
 
 import argparse
@@ -9,10 +13,13 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import registry
 from repro.models import lm
-from repro.serve.decode import make_prefill_step, make_serve_step
+from repro.serve.decode import greedy_generate
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve.sampling import SamplingParams
 
 
 def main():
@@ -22,37 +29,56 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--scheme", default="quartet2")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--legacy", action="store_true",
+                    help="seed fixed-batch greedy loop (baseline)")
+    ap.add_argument("--no-prequant", action="store_true")
+    ap.add_argument("--dense", action="store_true",
+                    help="dense per-slot caches instead of the paged pool")
     args = ap.parse_args()
 
+    backend = jax.default_backend().upper()
     cfg = registry.get(args.arch).reduced()
     params = lm.init(cfg, jax.random.PRNGKey(0))
     b, s = args.batch, args.prompt_len
-    max_len = s + args.tokens + 8
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    rng = np.random.RandomState(1)
+    prompts = [list(map(int, rng.randint(0, cfg.vocab, s))) for _ in range(b)]
 
-    cache = lm.init_cache(cfg, b, max_len)
-    prefill = jax.jit(make_prefill_step(cfg, args.scheme))
-    step = jax.jit(make_serve_step(cfg, args.scheme))
+    if args.legacy:
+        t0 = time.perf_counter()
+        gen = greedy_generate(params, cfg, args.scheme, jnp.asarray(prompts),
+                              args.tokens)
+        jax.block_until_ready(gen)
+        dt = time.perf_counter() - t0
+        print(f"arch={cfg.name} scheme={args.scheme} legacy loop")
+        print(f"generate: {b}x{args.tokens} tokens in {dt*1e3:.0f}ms "
+              f"= {b*args.tokens/dt:.1f} tok/s ({backend})")
+        print("sample token ids:", gen[0, :12].tolist())
+        return
 
+    max_len = ((s + args.tokens) // 16 + 2) * 16
+    eng = ServeEngine(cfg, params, EngineConfig(
+        n_slots=b, max_len=max_len, prefill_chunk=16,
+        paged=not args.dense, prequant=not args.no_prequant,
+        scheme=args.scheme))
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k)
+    ids = [eng.submit(Request(prompt=p, max_new=args.tokens, sampling=sp))
+           for p in prompts]
     t0 = time.perf_counter()
-    logits, cache = prefill(params, cache, {"tokens": prompts})
-    tok = jnp.argmax(logits[:, -1:], -1)
-    jax.block_until_ready(tok)
-    t_prefill = time.perf_counter() - t0
+    results = {r.req_id: r for r in eng.run()}
+    wall = time.perf_counter() - t0
+    st = eng.stats
 
-    out, t0 = [tok], time.perf_counter()
-    for i in range(args.tokens - 1):
-        logits, cache = step(params, cache, tok, jnp.int32(s + i))
-        tok = jnp.argmax(logits[:, -1:], -1)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    gen = jnp.concatenate(out, 1)
-    print(f"arch={cfg.name} scheme={args.scheme}")
-    print(f"prefill: {b}x{s} tokens in {t_prefill*1e3:.0f}ms")
-    print(f"decode:  {args.tokens-1} steps x {b} seqs "
-          f"= {(args.tokens-1)*b/dt:.1f} tok/s (CPU)")
-    print("sample token ids:", gen[0, :12].tolist())
+    print(f"arch={cfg.name} scheme={args.scheme} engine "
+          f"(paged={not args.dense}, prequant={not args.no_prequant})")
+    print(f"prefill: {st['prefill_tokens']} tokens in {st['prefill_s']*1e3:.0f}ms")
+    print(f"decode:  {st['decode_tokens']} tokens over {st['decode_steps']} "
+          f"steps = {st['decode_tokens']/max(st['decode_s'],1e-9):.1f} tok/s "
+          f"({backend})")
+    print(f"end-to-end: {wall*1e3:.0f}ms, slots={b}, "
+          f"pool blocks free {eng.pool.free_block_count}/{eng.pool.n_blocks}")
+    print("sample token ids:", results[ids[0]].tokens[:12])
 
 
 if __name__ == "__main__":

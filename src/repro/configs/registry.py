@@ -26,7 +26,10 @@ def _norm(name: str) -> str:
 
 
 def get(name: str) -> ArchConfig:
-    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    norm = _norm(name)
+    if norm not in ARCH_IDS:
+        raise KeyError(f"unknown arch '{name}'; have {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{norm}")
     return mod.CONFIG
 
 

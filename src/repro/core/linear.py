@@ -243,16 +243,76 @@ def _unpack_qt(res) -> Q.QTensor:
 
 
 # --------------------------------------------------------------------------
+# quantize-once weights (serving): the deterministic forward quantizers make
+# W's NVFP4 image a pure function of W, so inference packs it ONCE and decode
+# never re-runs weight quantization (serve/prequant.py builds these).
+# --------------------------------------------------------------------------
+
+import typing
+
+
+class PackedQWeight(typing.NamedTuple):
+    """An offline-packed NVFP4 weight: 4.5 bits/element at rest.
+
+    Bit-exact round trip: `packed` holds E2M1 codes (2/byte), `scales8` the
+    e4m3 group scales (both produced by the same `_fwd_quant` the per-step
+    path runs), so unpacking reproduces the per-step QTensor exactly.
+    A NamedTuple => a pytree: stacked-layer stacks scan/vmap transparently.
+    """
+
+    packed: jax.Array   # uint8 (..., N, K // 2)
+    scales8: jax.Array  # float8_e4m3fn (..., N, K // 16)
+    gscale: jax.Array   # float32 (...,) per-tensor scale
+
+    @property
+    def out_features(self) -> int:
+        return self.packed.shape[-2]
+
+
+def pack_weight(w: jax.Array, kind: str) -> PackedQWeight:
+    """Quantize one 2D weight with forward quantizer `kind` and pack it."""
+    packed, scales8, gscale = _pack_qt(_fwd_quant(w, kind))
+    return PackedQWeight(packed, scales8, gscale)
+
+
+def _qlinear_packed(x: jax.Array, w: PackedQWeight, scheme: str) -> jax.Array:
+    """Inference forward against a prequantized weight.
+
+    Bit-identical to `_qlinear_fwd` on the raw weight: the activation side
+    still quantizes per call (activations change every step; weights don't).
+    """
+    sch = S.get(scheme)
+    assert sch.fwd_w != "none", \
+        f"scheme {scheme} does not quantize weights; pass the raw array"
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    qw = _unpack_qt((w.packed, w.scales8, w.gscale))
+    if sch.fwd_x != "none":
+        y = _qmm(_fwd_quant(xf, sch.fwd_x), qw)
+    else:
+        y = _mm(xf, Q.dequant(qw, jnp.bfloat16))
+    return y.astype(x.dtype).reshape(*lead, -1)
+
+
+# --------------------------------------------------------------------------
 # the custom-vjp linear
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
-def qlinear(x: jax.Array, w: jax.Array, seed: jax.Array, scheme: str = "quartet2"):
+def qlinear(x: jax.Array, w, seed: jax.Array, scheme: str = "quartet2"):
     """y = x @ w^T under the given quantization scheme.
 
-    x: (..., K) activations; w: (N, K) weight; seed: uint32[2] per-step/site
+    x: (..., K) activations; w: (N, K) weight — raw array (training) or
+    PackedQWeight (quantize-once serving); seed: uint32[2] per-step/site
     randomness (ignored by deterministic schemes).
     """
+    if isinstance(w, PackedQWeight):
+        return _qlinear_packed(x, w, scheme)
+    return _qlinear_cvjp(x, w, seed, scheme)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _qlinear_cvjp(x: jax.Array, w: jax.Array, seed: jax.Array,
+                  scheme: str = "quartet2"):
     y, _ = _qlinear_fwd(x, w, seed, scheme)
     return y
 
@@ -352,7 +412,7 @@ def _qlinear_bwd(scheme, res, e):
     return dx, dw, None
 
 
-qlinear.defvjp(_qlinear_fwd, _qlinear_bwd)
+_qlinear_cvjp.defvjp(_qlinear_fwd, _qlinear_bwd)
 
 
 def dense(x: jax.Array, w: jax.Array) -> jax.Array:

@@ -1,0 +1,26 @@
+"""Distribution layer: sharding rules, pipeline parallelism, NVFP4 gradient
+compression, and a version-spanning `shard_map` shim.
+
+`shard_map` moved from `jax.experimental.shard_map` (kwarg `check_rep`) to
+`jax.shard_map` (kwarg `check_vma`) across jax releases; callers here use one
+spelling and run on either.
+"""
+
+from __future__ import annotations
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, check_rep=None):
+    """`jax.shard_map` / `jax.experimental.shard_map` compat wrapper.
+
+    `check_vma` (new spelling) and `check_rep` (old spelling) are the same
+    knob; pass either and it is translated to whatever the installed jax
+    expects.
+    """
+    flag = check_vma if check_vma is not None else check_rep
+    try:
+        from jax import shard_map as _sm  # jax >= 0.6
+        kw = {} if flag is None else {"check_vma": flag}
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as _sm
+        kw = {} if flag is None else {"check_rep": flag}
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

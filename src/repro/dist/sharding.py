@@ -1,0 +1,125 @@
+"""Sharding rules: parameter / optimizer-state / cache / input partition specs
+for the production (data, model) mesh.
+
+The rules are name- and shape-driven (no per-arch tables):
+
+  - 1D params (norm gains, biases, lambdas) replicate.
+  - router weights replicate (fp32, tiny, bias-sensitive — never sharded).
+  - 2D weights put the out-dim on "model" when divisible, else try the in-dim;
+    the in-dim additionally goes to "data" under FSDP (ZeRO-3-style).
+  - stacked layer params (leading scan axis from lm._stack_init) never shard
+    the leading axis; the rules above apply to the trailing dims.
+  - 4D expert stacks (L, E, f, d) put experts on "model" (expert parallelism)
+    and the trailing in-dim on "data" under FSDP.
+  - decode caches shard batch -> "data" and head_dim -> "model"; the sequence
+    axis stays unsharded (decode appends along it).
+
+An axis is only assigned when its size divides the mesh axis size — GSPMD
+would otherwise pad-and-replicate, which costs more wire than replication.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_REPLICATED_TOKENS = ("router", "norm", "/n1", "/n2", "/nx", "gn", "mu",
+                      "lam", "bias", "/ba", "/bx", "conv_b")
+
+
+def _div(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def param_spec(path: str, shape: tuple[int, ...], *, model: int, data: int,
+               fsdp: bool) -> P:
+    """PartitionSpec for one parameter leaf addressed by `path`."""
+    axes: list = [None] * len(shape)
+    if len(shape) <= 1 or any(t in path for t in _REPLICATED_TOKENS):
+        return P(*axes)
+
+    if len(shape) == 4:
+        # stacked expert weights (L, E, f, d): experts -> model (EP)
+        if _div(shape[1], model):
+            axes[1] = "model"
+        if fsdp and _div(shape[3], data):
+            axes[3] = "data"
+        return P(*axes)
+
+    # trailing (out, in) matrix; leading stacked axis (if 3D) stays None
+    o, i = len(shape) - 2, len(shape) - 1
+    if _div(shape[o], model):
+        axes[o] = "model"
+    elif _div(shape[i], model):
+        axes[i] = "model"
+    if fsdp and axes[i] is None and _div(shape[i], data):
+        axes[i] = "data"
+    return P(*axes)
+
+
+def cache_spec(kind: str, shape: tuple[int, ...], *, model: int, data: int) -> P:
+    """Decode-cache leaf spec. Layout convention: (L, B, S?, ..., feature).
+
+    Batch (axis 1) -> data; the trailing feature axis -> model when the leaf
+    is wide enough to matter (>= 3 trailing dims, e.g. (B, S, KV, hd) K/V or
+    (B, H, d, d) WKV state); sequence/position axes stay unsharded.
+    """
+    axes: list = [None] * len(shape)
+    if len(shape) >= 2 and _div(shape[1], data):
+        axes[1] = "data"
+    if len(shape) >= 4 and _div(shape[-1], model):
+        axes[-1] = "model"
+    return P(*axes)
+
+
+# --------------------------------------------------------------------------
+# tree-level builders (used by launch/dryrun and the distributed examples)
+# --------------------------------------------------------------------------
+
+def _mesh_sizes(mesh) -> tuple[int, int]:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("model", 1), sizes.get("data", 1)
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        out.append(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k)))))
+    return "/".join(out)
+
+
+def state_shardings(state, mesh, *, fsdp: bool):
+    """NamedShardings for a params-or-train-state pytree (shape-structs ok)."""
+    model, data = _mesh_sizes(mesh)
+
+    def one(path, leaf):
+        spec = param_spec(_path_str(path), tuple(leaf.shape),
+                          model=model, data=data, fsdp=fsdp)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, state)
+
+
+def cache_shardings(cache, mesh):
+    model, data = _mesh_sizes(mesh)
+
+    def one(path, leaf):
+        p = _path_str(path)
+        kind = p.rsplit("/", 1)[-1]
+        spec = cache_spec(kind, tuple(leaf.shape), model=model, data=data)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def input_shardings(batch, mesh):
+    """Token/label/embed inputs: batch axis -> data, rest replicated."""
+    _, data = _mesh_sizes(mesh)
+
+    def one(leaf):
+        axes: list = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1 and _div(leaf.shape[0], data):
+            axes[0] = "data"
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree.map(one, batch)

@@ -12,15 +12,20 @@ from __future__ import annotations
 import jax
 
 
+def _mk(shape, axes):
+    if hasattr(jax.sharding, "AxisType"):  # newer jax wants explicit Auto
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mk(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Elastic variant: any (pod, data, model) factorization of the job's
     device count (checkpoints are mesh-independent, see checkpoint/)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mk(shape, axes)

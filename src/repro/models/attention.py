@@ -131,29 +131,55 @@ def attend(q, k, v, *, causal=True, window=None):
     return sdpa(q, k, v, causal=causal, window=window)
 
 
-def decode_sdpa(q, k_cache, v_cache, pos, window=None):
-    """Single-position decode. q: (B,1,H,hd); caches (B,Smax,KV,hd); pos (B,)."""
+def decode_sdpa(q, k_cache, v_cache, pos, window=None, abs_pos=None):
+    """Decode attention over a cache. q: (B,Sq,H,hd); caches (B,Smax,KV,hd);
+    pos (B,) is the absolute position of each row's FIRST query token (Sq > 1
+    is a chunked-prefill step, Sq == 1 plain decode).
+
+    `abs_pos` (B,Smax) optionally maps cache index -> absolute position for
+    ring buffers (sliding-window caches that wrap); entries < 0 mean "never
+    written". Default: cache index IS the absolute position.
+    """
     from repro.core import linear as QL  # sharding hints (None off-mesh)
-    b, _, h, hd = q.shape
+    b, sq, h, hd = q.shape
     kv = k_cache.shape[2]
     rep = h // kv
     sk = k_cache.shape[1]
-    qf = q.reshape(b, kv, rep, hd).astype(jnp.float32)
+    qf = q.reshape(b, sq, kv, rep, hd).astype(jnp.float32)
     # Perf iteration (decode): the KV cache shards head_dim over "model"; pin
     # q to the SAME hd sharding and the score layout to batch-DP so the
-    # contraction lowers to a psum of (B,KV,rep,S) scores instead of
+    # contraction lowers to a psum of (B,KV,rep,Sq,S) scores instead of
     # all-gathering the multi-GiB cache.
-    qf = QL._hint(qf, (QL._dp(b), None, None, QL._tp(hd)))
-    s = jnp.einsum("bgrh,bkgh->bgrk", qf, k_cache.astype(jnp.float32)) / jnp.sqrt(hd)
-    s = QL._hint(s, (QL._dp(b), None, None, None))
-    kj = jnp.arange(sk)[None, :]
-    ok = kj <= pos[:, None]
+    qf = QL._hint(qf, (QL._dp(b), None, None, None, QL._tp(hd)))
+    s = jnp.einsum("bqgrh,bkgh->bgrqk", qf, k_cache.astype(jnp.float32)) / jnp.sqrt(hd)
+    s = QL._hint(s, (QL._dp(b), None, None, None, None))
+    qpos = pos[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]  # (B,Sq)
+    if abs_pos is None:
+        kj = jnp.arange(sk, dtype=jnp.int32)[None, :]
+    else:
+        kj = abs_pos
+    ok = kj[:, None, :] <= qpos[:, :, None]                          # (B,Sq,Sk)
+    if abs_pos is not None:
+        ok &= kj[:, None, :] >= 0
     if window is not None:
-        ok &= kj > (pos[:, None] - window)
-    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+        ok &= kj[:, None, :] > qpos[:, :, None] - window
+    s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bgrk,bkgv->bgrv", p, v_cache.astype(jnp.float32))
-    return o.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)
+    o = jnp.einsum("bgrqk,bkgv->bqgrv", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, sq, h, v_cache.shape[-1]).astype(q.dtype)
+
+
+def ring_abs_pos(pos, sq: int, cap: int):
+    """Absolute position held by each ring-buffer slot after writing a chunk.
+
+    With per-row last written position P = pos + sq - 1, slot j holds the
+    largest position <= P congruent to j mod cap; negative results mean the
+    slot was never written. Valid whenever cap == window (a slot's previous
+    occupant is at least one full window older, so masking by query position
+    is exact)."""
+    pmax = pos + sq - 1
+    j = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    return pmax[:, None] - ((pmax[:, None] - j) % cap)
 
 
 # --------------------------------------------------------------------------
@@ -206,16 +232,57 @@ def gqa_apply(p, x, cfg, scheme, seed, layer, *, causal=True, window=None,
     return out, (k, v)
 
 
-def gqa_decode(p, x, cfg, scheme, seed, layer, cache_kv, pos, *, window=None):
-    """One-token decode. cache_kv: (k,v) of shape (B, Smax, KV, hd); pos is a
-    scalar step index (uniform across the batch, standard serving layout) so
-    the cache update is a single dynamic slice, not a full-cache rewrite."""
-    b = x.shape[0]
-    posb = jnp.full((b,), pos, jnp.int32)
-    q, k, v = _project_qkv(p, x, cfg, scheme, seed, layer, posb[:, None])
+def gqa_decode(p, x, cfg, scheme, seed, layer, cache_kv, pos, *, window=None,
+               active=None, block_table=None):
+    """Cached decode / chunked-prefill step. x: (B, Sq, D) with Sq >= 1.
+
+    pos: scalar or (B,) — absolute position of each row's first token
+      (per-sequence vector = ragged prompts / continuous batching).
+    active: (B,) bool — rows whose cache may be written (inactive slots in a
+      serving batch keep their cache bit-for-bit: writes are routed out of
+      bounds and dropped).
+    block_table: (B, MAXB) int32 — when given, cache_kv holds POOL-shaped
+      (P, BS, KV, hd) leaves and reads/writes go through the paged KV pool
+      (serve/kv_pool.py); unallocated entries carry the pool's OOB sentinel.
+    """
+    b, sq = x.shape[:2]
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = posb[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, scheme, seed, layer, positions)
     kc, vc = cache_kv
-    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
-    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
-    o = decode_sdpa(q, kc, vc, posb, window=window)
-    out = qlinear(o.reshape(b, 1, -1), p["wo"], site_seed(seed, layer, 3), scheme)
+    valid = positions >= 0
+    if active is not None:
+        valid &= active[:, None]
+    if block_table is not None:
+        from repro.serve import kv_pool as KV
+        kc = KV.scatter_tokens(kc, block_table, positions, k, valid)
+        vc = KV.scatter_tokens(vc, block_table, positions, v, valid)
+        o = decode_sdpa(q, KV.gather_view(kc, block_table),
+                        KV.gather_view(vc, block_table), posb, window=window)
+    else:
+        cap = kc.shape[1]
+        ring = window is not None and cap == window
+        if ring and sq > 1:
+            # in-chunk ring writes evict keys still inside earlier chunk
+            # queries' windows, and ring_abs_pos labels slots from the
+            # chunk's LAST position only — correct solely for sq == 1
+            raise NotImplementedError(
+                "ring-buffer (cap == window) caches decode one token at a "
+                "time; chunked prefill needs a full-capacity or paged cache")
+        idx = positions % cap if ring else positions
+        idx = jnp.where(valid, idx, cap)  # OOB index => scatter drops the row
+        bi = jnp.arange(b)[:, None]
+        kc = kc.at[bi, idx].set(k.astype(kc.dtype), mode="drop")
+        vc = vc.at[bi, idx].set(v.astype(vc.dtype), mode="drop")
+        abs_pos = ring_abs_pos(posb, sq, cap) if ring else None
+        o = decode_sdpa(q, kc, vc, posb, window=window, abs_pos=abs_pos)
+    if active is not None:
+        # Inactive rows must not read cache memory: their stale contents are
+        # layout-dependent (dense keeps retired sequences' K/V, the pool
+        # reads zeros) and any nonzero garbage would leak into active rows
+        # through the per-tensor activation-quantization absmax. Zeroing the
+        # attention output makes inactive rows a pure function of their
+        # (deterministic) token stream.
+        o = o * active[:, None, None, None].astype(o.dtype)
+    out = qlinear(o.reshape(b, sq, -1), p["wo"], site_seed(seed, layer, 3), scheme)
     return out, (kc, vc)

@@ -105,8 +105,26 @@ def _stack_init(key, pattern, count, cfg):
 # layer application
 # --------------------------------------------------------------------------
 
+def _merge_state(active, new, old):
+    """Keep `new` state rows where active, `old` elsewhere (per batch row).
+
+    Token-cache kinds gate writes inside the mixer (OOB scatter drop); the
+    recurrent kinds (wkv / tm_prev / cm_prev / lru) update unconditionally in
+    their scans, so a serving batch must restore inactive rows here or a slot
+    mid-prefill would be corrupted by the interleaved decode steps."""
+    if active is None:
+        return new
+
+    def sel(n, o):
+        m = active.reshape(active.shape[0], *([1] * (n.ndim - 1)))
+        return jnp.where(m, n, o.astype(n.dtype))
+
+    return jax.tree.map(sel, new, old)
+
+
 def _apply_layer(spec, p, x, cfg, scheme, seed, layer_id, *, mode,
-                 cache=None, pos=None, positions=None, enc_out=None):
+                 cache=None, pos=None, positions=None, enc_out=None,
+                 active=None, block_table=None):
     """One (mixer, ff) layer. Returns (x, new_cache_entry, aux)."""
     mixer, ff = spec
     window = cfg.griffin.window if (cfg.griffin and mixer == "lattn") else None
@@ -116,7 +134,8 @@ def _apply_layer(spec, p, x, cfg, scheme, seed, layer_id, *, mode,
     if mixer in ("gqa", "lattn"):
         if mode == "decode":
             o, new_kv = A.gqa_decode(p["mix"], h, cfg, scheme, seed, layer_id,
-                                     cache["kv"], pos, window=window)
+                                     cache["kv"], pos, window=window,
+                                     active=active, block_table=block_table)
             cache = {**cache, "kv": new_kv}
         else:
             o, kv = A.gqa_apply(p["mix"], h, cfg, scheme, seed, layer_id,
@@ -127,7 +146,8 @@ def _apply_layer(spec, p, x, cfg, scheme, seed, layer_id, *, mode,
     elif mixer == "mla":
         if mode == "decode":
             o, new_c = M.mla_decode(p["mix"], h, cfg, scheme, seed, layer_id,
-                                    cache["mla"], pos)
+                                    cache["mla"], pos, active=active,
+                                    block_table=block_table)
             cache = {**cache, "mla": new_c}
         else:
             o, ckr = M.mla_apply(p["mix"], h, cfg, scheme, seed, layer_id,
@@ -141,12 +161,17 @@ def _apply_layer(spec, p, x, cfg, scheme, seed, layer_id, *, mode,
                                       state=st if mode != "train" else None,
                                       prev=pv)
         if cache is not None:
+            if mode == "decode":
+                st = _merge_state(active, st, cache["wkv"])
+                last = _merge_state(active, last, cache["tm_prev"])
             cache = {**cache, "wkv": st, "tm_prev": last}
     elif mixer == "rec":
         st = cache["lru"] if (cache is not None and mode != "train") else None
         o, st = G.recurrent_block_apply(p["mix"], h, cfg, scheme, seed,
                                         layer_id, state=st)
         if cache is not None:
+            if mode == "decode":
+                st = _merge_state(active, st, cache["lru"])
             cache = {**cache, "lru": st}
     else:
         raise ValueError(mixer)
@@ -169,19 +194,27 @@ def _apply_layer(spec, p, x, cfg, scheme, seed, layer_id, *, mode,
         o, last = W.channelmix_apply(p["mix"], h, cfg, scheme, seed, layer_id,
                                      prev=pv)
         if cache is not None:
+            if mode == "decode":
+                last = _merge_state(active, last, cache["cm_prev"])
             cache = {**cache, "cm_prev": last}
         x = x + o
     return x, cache, aux
 
 
 def _fill_cache(buf, new, window):
-    """Write prefill K/V (or latents) into a (possibly ring) cache buffer."""
+    """Write prefill K/V (or latents) into a (possibly ring) cache buffer.
+
+    Ring alignment: decode (attention.ring_abs_pos) expects slot j to hold
+    the position ≡ j (mod cap), so the last `cap` prefill positions are
+    rolled into place rather than written flat — with prompt length S the
+    key for position p lands at slot p % cap."""
     def put(b, n):
         n = n.astype(b.dtype)
         s, cap = n.shape[1], b.shape[1]
         if window is not None and s > cap:
-            n = n[:, -cap:]  # ring keeps the last `window` positions
-            s = cap
+            # keep the last `cap` positions S-cap..S-1 and rotate so that
+            # position p sits at slot p % cap (roll by S mod cap)
+            n = jnp.roll(n[:, -cap:], s % cap, axis=1)
         return jax.lax.dynamic_update_slice_in_dim(b, n, 0, axis=1)
     return jax.tree.map(put, buf, tuple(new) if isinstance(new, tuple) else new)
 
@@ -270,7 +303,7 @@ REMAT = False
 
 def _run_stages(params, x, cfg, scheme, seed, *, mode, caches=None,
                 pos=None, positions=None, enc_out=None, stages=None,
-                layer_offset=0):
+                layer_offset=0, active=None, block_table=None):
     specs = stages if stages is not None else layer_specs(cfg)
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = []
@@ -289,7 +322,7 @@ def _run_stages(params, x, cfg, scheme, seed, *, mode, caches=None,
                 x, c_out, a = _apply_layer(
                     spec, layer_p[f"l{li}"], x, cfg, scheme, seed, lid,
                     mode=mode, cache=c_in, pos=pos, positions=positions,
-                    enc_out=enc_out)
+                    enc_out=enc_out, active=active, block_table=block_table)
                 if new_c is not None:
                     new_c[f"l{li}"] = c_out
                 aux = aux + a
@@ -317,11 +350,18 @@ def head_weight(params, cfg):
 
 
 def forward(params, cfg: ArchConfig, inputs, scheme: str, seed: jax.Array,
-            *, caches=None, mode: str = "train", pos=None, head: bool = True):
+            *, caches=None, mode: str = "train", pos=None, head: bool = True,
+            active=None, block_table=None):
     """Full model. inputs: {"tokens": (B,S)} or {"embeds": (B,S,D)} (+ both
     for enc-dec). Returns (logits_or_hidden, new_caches, aux_loss); with
     head=False the final normed hidden states are returned (lm_loss fuses the
-    head with a chunked CE so full logits never materialize)."""
+    head with a chunked CE so full logits never materialize).
+
+    Decode mode serves ragged batches: `pos` may be a scalar (uniform batch,
+    legacy) or a per-sequence (B,) vector; S >= 1 tokens are consumed per row
+    (S > 1 = chunked prefill into the cache). `active` (B,) gates cache
+    writes per row; `block_table` (B, MAXB) switches kv/mla cache leaves to
+    the paged pool layout (see serve/kv_pool.py)."""
     if cfg.enc_dec:
         return _encdec_forward(params, cfg, inputs, scheme, seed,
                                caches=caches, mode=mode, pos=pos, head=head)
@@ -330,10 +370,14 @@ def forward(params, cfg: ArchConfig, inputs, scheme: str, seed: jax.Array,
     else:
         x = embed_lookup(params["embed"], inputs["tokens"])
     b, s = x.shape[:2]
-    positions = (jnp.full((b, 1), pos, jnp.int32) if mode == "decode"
-                 else jnp.arange(s)[None, :])
+    if mode == "decode":
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+        positions = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    else:
+        positions = jnp.arange(s)[None, :]
     x, caches, aux = _run_stages(params, x, cfg, scheme, seed, mode=mode,
-                                 caches=caches, pos=pos, positions=positions)
+                                 caches=caches, pos=pos, positions=positions,
+                                 active=active, block_table=block_table)
     x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
     if not head:
         return x, caches, aux
@@ -373,11 +417,12 @@ def _encdec_forward(params, cfg, inputs, scheme, seed, *, caches, mode, pos,
     if mode == "decode":
         enc_out = caches["enc_out"]
         x = embed_lookup(params["dec_embed"], inputs["tokens"])
-        positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
+        positions = posb[:, None] + jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
         dec_params = {"stages": params["dec_stages"]}
         x, new_dec, _ = _run_stages(dec_params, x, cfg, scheme, seed,
                                     mode="decode", caches=caches["dec"],
-                                    pos=pos, positions=positions,
+                                    pos=posb, positions=positions,
                                     enc_out=enc_out, stages=DEC_STAGES(cfg))
         x = norm(x, params["dec_final_norm"], cfg.norm, cfg.norm_eps)
         logits = lm_head(x, params["dec_head"], cfg.quantize_lm_head, scheme, seed)

@@ -73,38 +73,66 @@ def mla_apply(p, x, cfg, scheme, seed, layer, *, positions=None):
     return out, (c, k_rope[:, :, 0, :])
 
 
-def mla_decode(p, x, cfg, scheme, seed, layer, cache, pos):
-    """Absorbed-form decode over the latent cache.
+def mla_decode(p, x, cfg, scheme, seed, layer, cache, pos, *, active=None,
+               block_table=None):
+    """Absorbed-form decode over the latent cache. x: (B, Sq, D), Sq >= 1
+    (Sq > 1 = chunked prefill).
 
-    cache = (c: (B,Smax,kv_lora), kr: (B,Smax,rope)); pos scalar.
+    cache = (c: (B,Smax,kv_lora), kr: (B,Smax,rope)) — or pool-shaped
+    (P,BS,dim) leaves addressed through `block_table` (serve/kv_pool.py).
+    pos: scalar or (B,) first-token position; active: (B,) write gate.
     score_h(t) = q_nope_h^T Wuk_h c_t + q_rope_h^T kr_t   (Wuk absorbed into q)
     out_h = (sum_t p_t c_t)^T Wuv_h                        (Wuv absorbed after)
+
+    NOTE: wkv_b participates as a RAW bf16/f32 matrix here (absorbed einsums
+    are not quantized GEMMs), so the quantize-once weight cache leaves it
+    unpacked (see serve/prequant.py).
     """
     m = cfg.mla
-    b = x.shape[0]
+    b, sq = x.shape[:2]
     h = cfg.n_heads
-    posb = jnp.full((b,), pos, jnp.int32)
-    q_nope, q_rope, c_new, kr_new = _latent(p, x, cfg, scheme, seed, layer, posb[:, None])
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = posb[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+    q_nope, q_rope, c_new, kr_new = _latent(p, x, cfg, scheme, seed, layer, positions)
     cc, kc = cache
-    cc = jax.lax.dynamic_update_slice_in_dim(cc, c_new.astype(cc.dtype), pos, axis=1)
-    kc = jax.lax.dynamic_update_slice_in_dim(kc, kr_new[:, :, 0, :].astype(kc.dtype), pos, axis=1)
+    kr2 = kr_new[:, :, 0, :]
+    valid = positions >= 0
+    if active is not None:
+        valid &= active[:, None]
+    if block_table is not None:
+        from repro.serve import kv_pool as KV
+        cc = KV.scatter_tokens(cc, block_table, positions, c_new, valid)
+        kc = KV.scatter_tokens(kc, block_table, positions, kr2, valid)
+        cv = KV.gather_view(cc, block_table)
+        kv = KV.gather_view(kc, block_table)
+    else:
+        idx = jnp.where(valid, positions, cc.shape[1])  # OOB => write dropped
+        bi = jnp.arange(b)[:, None]
+        cc = cc.at[bi, idx].set(c_new.astype(cc.dtype), mode="drop")
+        kc = kc.at[bi, idx].set(kr2.astype(kc.dtype), mode="drop")
+        cv, kv = cc, kc
 
     wkv_b = p["wkv_b"].reshape(h, m.qk_nope_head_dim + m.v_head_dim, m.kv_lora_rank)
     w_uk = wkv_b[:, : m.qk_nope_head_dim, :]     # (H, nope, lora)
     w_uv = wkv_b[:, m.qk_nope_head_dim:, :]      # (H, v, lora)
 
-    q_abs = jnp.einsum("bqhn,hnl->bhl", q_nope.astype(jnp.float32),
-                       w_uk.astype(jnp.float32))              # (B,H,lora)
-    s_lat = jnp.einsum("bhl,btl->bht", q_abs, cc.astype(jnp.float32))
-    s_rope = jnp.einsum("bqhr,btr->bht", q_rope.astype(jnp.float32),
-                        kc.astype(jnp.float32))
+    q_abs = jnp.einsum("bqhn,hnl->bqhl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))              # (B,Sq,H,lora)
+    s_lat = jnp.einsum("bqhl,btl->bhqt", q_abs, cv.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhr,btr->bhqt", q_rope.astype(jnp.float32),
+                        kv.astype(jnp.float32))
     scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
     s = (s_lat + s_rope) * scale
-    tmask = jnp.arange(cc.shape[1])[None, None, :] <= pos
-    s = jnp.where(tmask, s, NEG_INF)
+    tmask = (jnp.arange(cv.shape[1], dtype=jnp.int32)[None, None, :]
+             <= positions[:, :, None])                        # (B,Sq,T)
+    s = jnp.where(tmask[:, None], s, NEG_INF)
     prob = jax.nn.softmax(s, axis=-1)
-    o_lat = jnp.einsum("bht,btl->bhl", prob, cc.astype(jnp.float32))
-    o = jnp.einsum("bhl,hvl->bhv", o_lat, w_uv.astype(jnp.float32))
-    out = qlinear(o.reshape(b, 1, -1).astype(x.dtype), p["wo"],
+    o_lat = jnp.einsum("bhqt,btl->bqhl", prob, cv.astype(jnp.float32))
+    o = jnp.einsum("bqhl,hvl->bqhv", o_lat, w_uv.astype(jnp.float32))
+    if active is not None:
+        # see gqa_decode: inactive rows must not read (layout-dependent)
+        # stale cache memory — zero their attention output
+        o = o * active[:, None, None, None].astype(o.dtype)
+    out = qlinear(o.reshape(b, sq, -1).astype(x.dtype), p["wo"],
                   site_seed(seed, layer, 4), scheme)
     return out, (cc, kc)

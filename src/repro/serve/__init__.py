@@ -1,0 +1,11 @@
+"""NVFP4 serving subsystem.
+
+Modules (import them directly; this package init stays import-free so the
+model code can reach `repro.serve.kv_pool` without cycles):
+
+    engine    — ServeEngine: continuous batching, admission control, slots
+    kv_pool   — block-based paged KV pool + per-sequence block tables
+    prequant  — quantize-once NVFP4 weight cache
+    sampling  — greedy / temperature / top-k token sampling
+    decode    — thin compatibility wrappers (prefill/serve steps, greedy loop)
+"""

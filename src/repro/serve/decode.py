@@ -1,9 +1,15 @@
 """Serving entry points: prefill and single-token decode steps.
 
+This module is the thin compatibility layer kept for the launch/dryrun cost
+model and the simple examples; the production path is `serve.engine
+.ServeEngine` (continuous batching, paged KV pool, quantize-once weights).
+
 `serve_step` is what decode_32k / long_500k lower: one new token against a
-pre-allocated KV/state cache at a traced position. Forward quantization
-(RTN + 4/6) is deterministic, so serving needs no per-step randomness — the
-seed below is a fixed constant feeding the (unused-in-inference) backward.
+pre-allocated KV/state cache at a traced position — now a PER-SEQUENCE (B,)
+position vector (scalars broadcast), so ragged batches decode correctly.
+Forward quantization (RTN + 4/6) is deterministic, so serving needs no
+per-step randomness — the seed below is a fixed constant feeding the
+(unused-in-inference) backward.
 """
 
 from __future__ import annotations
@@ -35,20 +41,42 @@ def make_serve_step(cfg, scheme: str):
 
 
 def greedy_generate(params, cfg, scheme, prompt_tokens, max_new: int,
-                    max_len: int | None = None):
-    """Simple host-side generation loop (examples / tests)."""
+                    max_len: int | None = None, prompt_lens=None):
+    """Simple host-side generation loop (examples / tests / baseline).
+
+    `prompt_tokens` is (B, S) right-padded; `prompt_lens` (B,) gives each
+    row's true prompt length (default: all S). Decode runs with a
+    per-sequence position vector, so ragged prompts get correct logits for
+    attention-cached archs — previously a single scalar `pos` was shared
+    across rows, attending pad keys for every short prompt. Recurrent-state
+    archs (rwkv / griffin) integrate pad tokens during the single full-width
+    prefill, so ragged batches there must go through ServeEngine (which
+    prefills per sequence); this loop refuses rather than silently corrupt.
+
+    This is the fixed-batch reference loop: it re-quantizes every weight on
+    every step and restarts globally between batches. ServeEngine is the
+    production path.
+    """
     b, s = prompt_tokens.shape
     max_len = max_len or (s + max_new + 8)
     if cfg.enc_dec:
         raise NotImplementedError("use explicit enc-dec path in examples")
+    if prompt_lens is not None and cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            "ragged prompts on recurrent-state archs: the full-width prefill "
+            "would feed pad tokens into wkv/lru state — use serve.engine."
+            "ServeEngine, which prefills each sequence at its true length")
+    lens = (jnp.full((b,), s, jnp.int32) if prompt_lens is None
+            else jnp.asarray(prompt_lens, jnp.int32))
     cache = lm.init_cache(cfg, b, max_len)
     prefill = jax.jit(make_prefill_step(cfg, scheme))
     step = jax.jit(make_serve_step(cfg, scheme))
     logits, cache = prefill(params, cache, {"tokens": prompt_tokens})
-    tok = jnp.argmax(logits[:, -1:], axis=-1)
+    last = logits[jnp.arange(b), lens - 1]          # each row's real last token
+    tok = jnp.argmax(last, axis=-1)[:, None]
     out = [tok]
     for i in range(max_new - 1):
-        logits, cache = step(params, cache, tok, jnp.int32(s + i))
+        logits, cache = step(params, cache, tok, lens + i)
         tok = jnp.argmax(logits[:, -1:], axis=-1)
         out.append(tok)
     return jnp.concatenate(out, axis=1)

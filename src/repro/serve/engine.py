@@ -1,0 +1,290 @@
+"""ServeEngine: continuous-batching NVFP4 serving.
+
+The engine owns a fixed set of decode SLOTS (the batch dimension of every
+jitted step), a request queue with admission control, a paged KV pool, and a
+quantize-once weight cache. The scheduler loop interleaves:
+
+  1. ADMIT   — move queued requests into free slots (admission checks the
+               pool can back prompt + max_new tokens before accepting).
+  2. PREFILL — one chunk of ONE prefilling slot per iteration (bounded work
+               per tick keeps decode latency flat while prompts stream in).
+               Chunks run through the same decode-mode forward as decoding
+               (S=chunk tokens, per-sequence start position); other slots are
+               masked inactive, so their caches are untouched bit-for-bit.
+  3. DECODE  — one batched step over all slots in DECODE state; new requests
+               join as finished ones retire, never restarting the batch.
+
+Slot states: FREE -> PREFILL -> DECODE -> FREE. Exactly two compiled step
+shapes exist per engine: (n_slots, prefill_chunk) and (n_slots, 1); a
+trailing partial prompt chunk is fed token-by-token through the (n_slots, 1)
+step so recurrent-state archs (rwkv / griffin) never consume pad tokens.
+
+Everything the forward needs about raggedness travels as data (per-slot
+position vector, active mask, block table), so one compilation serves every
+admission pattern.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.serve.kv_pool import KVPool
+from repro.serve.prequant import prequantize
+from repro.serve.sampling import SamplingParams, sample_tokens
+
+_SEED = jnp.array([7, 7], jnp.uint32)  # deterministic forward; see decode.py
+
+FREE, PREFILL, DECODE = "free", "prefill", "decode"
+
+
+class QueueFull(RuntimeError):
+    """Admission control: the request queue is at capacity."""
+
+
+@dataclass
+class Request:
+    prompt: list[int]
+    max_new: int
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    req_id: int = -1  # assigned by submit()
+    arrival_s: float = 0.0
+
+
+@dataclass
+class RequestResult:
+    req_id: int
+    prompt: list[int]
+    tokens: list[int]
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    n_slots: int = 4
+    max_len: int = 256            # per-sequence capacity (prompt + generated)
+    block_size: int = 16
+    n_blocks: int | None = None   # pool size; default n_slots * max_len / bs
+    prefill_chunk: int = 16
+    paged: bool = True
+    prequant: bool = True
+    scheme: str = "quartet2"
+    max_queue: int = 256
+    base_seed: int = 0
+
+
+@dataclass
+class _Slot:
+    state: str = FREE
+    req: Request | None = None
+    cursor: int = 0               # prompt tokens already prefilled
+    length: int = 0               # tokens currently in the cache
+    last_tok: int = 0
+    generated: list[int] = field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, econf: EngineConfig | None = None):
+        if cfg.enc_dec:
+            raise NotImplementedError("enc-dec serving: use the explicit "
+                                      "encoder path (examples)")
+        self.cfg = cfg
+        self.econf = econf or EngineConfig()
+        e = self.econf
+        self.params = (prequantize(params, cfg, e.scheme) if e.prequant
+                       else params)
+        self.pool = KVPool(cfg, e.n_slots, e.max_len, paged=e.paged,
+                           block_size=e.block_size, n_blocks=e.n_blocks)
+        self.slots = [_Slot() for _ in range(e.n_slots)]
+        self.queue: deque[Request] = deque()
+        self._ids = itertools.count()
+        self._step_fns: dict[int, object] = {}
+        self._sampler = jax.jit(sample_tokens)
+        self._key = jax.random.PRNGKey(e.base_seed)
+        self._tick = 0
+        self.stats = {"prefill_s": 0.0, "decode_s": 0.0,
+                      "prefill_tokens": 0, "decode_tokens": 0,
+                      "decode_steps": 0, "ticks": 0,
+                      "admitted": 0, "rejected": 0, "finished": 0}
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+
+    def submit(self, request: Request) -> int:
+        """Queue a request; raises QueueFull when at capacity."""
+        if len(self.queue) >= self.econf.max_queue:
+            self.stats["rejected"] += 1
+            raise QueueFull(f"queue at capacity ({self.econf.max_queue})")
+        total = len(request.prompt) + request.max_new
+        if not self.pool.can_ever_admit(total):
+            # reject now: an unservable request would head-of-line block the
+            # FIFO forever (can_admit never becomes true)
+            self.stats["rejected"] += 1
+            raise ValueError(
+                f"request needs {total} positions "
+                f"({self.pool.blocks_for(total)} blocks) but the pool serves "
+                f"at most max_len={self.econf.max_len} / "
+                f"{self.pool.n_blocks} blocks")
+        request.req_id = next(self._ids)
+        self.queue.append(request)
+        return request.req_id
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s.state != FREE for s in self.slots)
+
+    def run(self) -> list[RequestResult]:
+        """Drain queue + slots; returns results in completion order."""
+        out: list[RequestResult] = []
+        while self.has_work():
+            out.extend(self.step())
+        return out
+
+    @property
+    def free_slots(self) -> int:
+        return sum(s.state == FREE for s in self.slots)
+
+    # ------------------------------------------------------------------
+    # scheduler iteration
+    # ------------------------------------------------------------------
+
+    def step(self) -> list[RequestResult]:
+        """One scheduler tick: admit, one prefill chunk, one decode step."""
+        self.stats["ticks"] += 1
+        self._admit()
+        self._prefill_tick()
+        finished = self._decode_tick()
+        return finished
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if not self.queue:
+                break
+            if slot.state != FREE:
+                continue
+            req = self.queue[0]
+            if not self.pool.can_admit(len(req.prompt) + req.max_new):
+                break  # FIFO: don't starve the head request
+            self.queue.popleft()
+            self.pool.reset_slot(i)
+            self.pool.commit(i, len(req.prompt) + req.max_new)
+            self.slots[i] = _Slot(state=PREFILL, req=req)
+            self.stats["admitted"] += 1
+
+    def _prefill_tick(self) -> None:
+        e = self.econf
+        for i, slot in enumerate(self.slots):
+            if slot.state != PREFILL:
+                continue
+            prompt = slot.req.prompt
+            remaining = len(prompt) - slot.cursor
+            size = e.prefill_chunk if remaining >= e.prefill_chunk else 1
+            chunk = prompt[slot.cursor: slot.cursor + size]
+            self.pool.ensure(i, slot.cursor + size)
+            tokens = np.zeros((e.n_slots, size), np.int32)
+            tokens[i] = chunk
+            pos = np.zeros((e.n_slots,), np.int32)
+            pos[i] = slot.cursor
+            active = np.zeros((e.n_slots,), bool)
+            active[i] = True
+            t0 = time.perf_counter()
+            logits = self._forward(size, tokens, pos, active)
+            jax.block_until_ready(logits)  # else async compute leaks into decode_s
+            self.stats["prefill_s"] += time.perf_counter() - t0
+            self.stats["prefill_tokens"] += size
+            slot.cursor += size
+            if slot.cursor == len(prompt):
+                # prompt fully cached: sample the first generated token from
+                # the logits of the prompt's last position
+                tok = int(self._sample(logits[:, -1])[i])
+                slot.state = DECODE
+                slot.length = len(prompt)
+                slot.last_tok = tok
+                slot.generated.append(tok)
+            return  # bounded work: one chunk per tick
+
+    def _decode_tick(self) -> list[RequestResult]:
+        e = self.econf
+        dec = [i for i, s in enumerate(self.slots) if s.state == DECODE]
+        finished: list[RequestResult] = []
+        # retire before stepping: a slot whose request is already complete
+        # (max_new reached) frees its blocks for the next admission
+        for i in list(dec):
+            slot = self.slots[i]
+            if len(slot.generated) >= slot.req.max_new:
+                finished.append(RequestResult(slot.req.req_id,
+                                              list(slot.req.prompt),
+                                              list(slot.generated)))
+                self.pool.release(i)
+                self.slots[i] = _Slot()
+                self.stats["finished"] += 1
+                dec.remove(i)
+        if not dec:
+            return finished
+
+        tokens = np.zeros((e.n_slots, 1), np.int32)
+        pos = np.zeros((e.n_slots,), np.int32)
+        active = np.zeros((e.n_slots,), bool)
+        for i in dec:
+            slot = self.slots[i]
+            self.pool.ensure(i, slot.length + 1)
+            tokens[i, 0] = slot.last_tok
+            pos[i] = slot.length
+            active[i] = True
+        t0 = time.perf_counter()
+        logits = self._forward(1, tokens, pos, active)
+        toks = self._sample(logits[:, -1])
+        jax.block_until_ready(toks)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_tokens"] += len(dec)
+        self.stats["decode_steps"] += 1
+        for i in dec:
+            slot = self.slots[i]
+            slot.length += 1
+            slot.last_tok = int(toks[i])
+            slot.generated.append(slot.last_tok)
+        return finished
+
+    # ------------------------------------------------------------------
+    # jitted steps
+    # ------------------------------------------------------------------
+
+    def _forward(self, size: int, tokens, pos, active):
+        fn = self._step_fns.get(size)
+        if fn is None:
+            cfg, scheme = self.cfg, self.econf.scheme
+
+            def step_fn(params, caches, table, tokens, pos, active):
+                logits, caches, _ = lm.forward(
+                    params, cfg, {"tokens": tokens}, scheme, _SEED,
+                    caches=caches, mode="decode", pos=pos, active=active,
+                    block_table=table)
+                return logits, caches
+
+            # donate the cache pytree: the pool is the dominant serving
+            # allocation and the step rebinds it, so XLA may update in place
+            # instead of double-buffering it
+            fn = self._step_fns[size] = jax.jit(step_fn, donate_argnums=(1,))
+        logits, self.pool.caches = fn(
+            self.params, self.pool.caches, self.pool.table_device(),
+            jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(active))
+        return logits
+
+    def _sample(self, last_logits):
+        temps = np.zeros((self.econf.n_slots,), np.float32)
+        topks = np.zeros((self.econf.n_slots,), np.int32)
+        for i, slot in enumerate(self.slots):
+            if slot.req is not None:
+                temps[i] = slot.req.sampling.temperature
+                topks[i] = slot.req.sampling.top_k
+        self._tick += 1
+        key = jax.random.fold_in(self._key, self._tick)
+        return self._sampler(last_logits, jnp.asarray(temps),
+                             jnp.asarray(topks), key)

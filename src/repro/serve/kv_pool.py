@@ -1,0 +1,261 @@
+"""Block-based paged KV pool with per-sequence block tables.
+
+Serving memory is dominated by decode caches. The pool carves each cache kind
+into fixed-size blocks of `block_size` token positions and hands blocks to
+sequences on demand (vLLM-style PagedAttention layout, adapted to the stacked
+stage pytrees of models/lm.py):
+
+  token kinds  ("kv", "mla"):      pool leaves (layers, n_blocks, block, ...)
+  state kinds  ("wkv", "tm_prev",
+                "cm_prev", "lru"): slot leaves (layers, n_slots, ...)
+                                   (recurrent state is O(1) per sequence —
+                                   one implicit "block" per slot)
+
+A per-slot block table (n_slots, max_blocks) maps logical block index ->
+physical pool block; unallocated entries hold the OOB sentinel `n_blocks`,
+so device-side writes through them are DROPPED by the scatter and gathers
+read zeros (`mode="fill"`). That single convention gives free write-masking
+for inactive slots and positions beyond a sequence's allocation.
+
+The device-side primitives (`gather_view` / `scatter_tokens`) are called
+from the mixer decode paths (models/attention.py, models/mla.py); the
+`KVPool` class is the host-side allocator driven by the engine scheduler.
+
+With `paged=False` the pool builds dense per-slot caches (n_slots, max_len,
+...) instead — same masking conventions, bit-identical attention arithmetic —
+used as the reference layout in tests and by the legacy greedy loop.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import griffin as G
+from repro.models import lm
+
+TOKEN_KINDS = ("kv", "mla")
+STATE_KINDS = ("wkv", "tm_prev", "cm_prev", "lru")
+
+
+# --------------------------------------------------------------------------
+# device-side primitives (used inside the jitted decode step)
+# --------------------------------------------------------------------------
+
+def gather_view(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """Materialize per-sequence logical views from the pool.
+
+    pool: (P, BS, ...); table: (B, MAXB) with OOB sentinel for unallocated.
+    Returns (B, MAXB*BS, ...): each row's blocks in logical order, zeros for
+    unallocated blocks (always masked downstream — attention only admits
+    key positions <= the row's current position).
+    """
+    v = pool.at[table].get(mode="fill", fill_value=0)
+    b, mb = table.shape
+    return v.reshape(b, mb * pool.shape[1], *pool.shape[2:])
+
+
+def scatter_tokens(pool: jax.Array, table: jax.Array, positions: jax.Array,
+                   vals: jax.Array, valid: jax.Array) -> jax.Array:
+    """Write per-token values through the block table.
+
+    positions: (B, S) absolute token positions; vals: (B, S, ...);
+    valid: (B, S) bool — rows/positions with valid=False (inactive slots,
+    out-of-range positions) are routed to the OOB sentinel and dropped.
+    """
+    n_blocks, bs = pool.shape[0], pool.shape[1]
+    b = table.shape[0]
+    logical = jnp.clip(positions, 0) // bs
+    blk = table.at[jnp.arange(b)[:, None], logical].get(
+        mode="fill", fill_value=n_blocks)
+    blk = jnp.where(valid, blk, n_blocks)  # OOB => scatter drops
+    off = jnp.clip(positions, 0) % bs
+    return pool.at[blk, off].set(vals.astype(pool.dtype), mode="drop")
+
+
+# --------------------------------------------------------------------------
+# cache construction (stage-aligned, mirrors lm.init_cache layouts)
+# --------------------------------------------------------------------------
+
+def _layer_cache(spec, cfg: ArchConfig, n_slots: int, max_len: int, *,
+                 paged: bool, n_blocks: int, block_size: int):
+    mixer, ff = spec
+    hd = cfg.hd
+    c: dict[str, Any] = {}
+
+    def tok(*feat):
+        if paged:
+            return jnp.zeros((n_blocks, block_size, *feat), jnp.bfloat16)
+        # dense serving cache: full max_len capacity for every kind — the
+        # sliding-window ring optimization is a paged-pool follow-on, and a
+        # uniform layout keeps dense/paged outputs bit-comparable.
+        return jnp.zeros((n_slots, max_len, *feat), jnp.bfloat16)
+
+    if mixer in ("gqa", "lattn"):
+        c["kv"] = (tok(cfg.n_kv_heads, hd), tok(cfg.n_kv_heads, hd))
+    elif mixer == "mla":
+        m = cfg.mla
+        c["mla"] = (tok(m.kv_lora_rank), tok(m.qk_rope_head_dim))
+    elif mixer == "rwkv_tm":
+        h = cfg.d_model // cfg.rwkv.head_dim
+        c["wkv"] = jnp.zeros((n_slots, h, cfg.rwkv.head_dim, cfg.rwkv.head_dim),
+                             jnp.float32)
+        c["tm_prev"] = jnp.zeros((n_slots, 1, cfg.d_model), jnp.bfloat16)
+    elif mixer == "rec":
+        c["lru"] = G.recurrent_state_init(cfg, n_slots)
+    if ff == "rwkv_cm":
+        c["cm_prev"] = jnp.zeros((n_slots, 1, cfg.d_model), jnp.bfloat16)
+    return c
+
+
+def init_cache(cfg: ArchConfig, n_slots: int, max_len: int, *, paged: bool,
+               n_blocks: int, block_size: int):
+    """Stage-aligned serving cache pytree (pool layout when paged)."""
+    stages = []
+    for pattern, count in lm.layer_specs(cfg):
+        one = {f"l{i}": _layer_cache(pattern[i], cfg, n_slots, max_len,
+                                     paged=paged, n_blocks=n_blocks,
+                                     block_size=block_size)
+               for i in range(len(pattern))}
+        stages.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (count, *x.shape)), one))
+    return stages
+
+
+def _map_state_kinds(caches, fn):
+    """Apply fn to every state-kind entry (list[stage] -> dict[l] -> kinds)."""
+    out = []
+    for stage in caches:
+        ns = {}
+        for lk, kinds in stage.items():
+            ns[lk] = {k: (jax.tree.map(fn, v) if k in STATE_KINDS else v)
+                      for k, v in kinds.items()}
+        out.append(ns)
+    return out
+
+
+# --------------------------------------------------------------------------
+# host-side allocator
+# --------------------------------------------------------------------------
+
+class OutOfBlocks(RuntimeError):
+    pass
+
+
+class KVPool:
+    """Host-side block allocator + owner of the device cache pytree.
+
+    The engine calls `ensure(slot, n)` before each forward so every position
+    < n has a backing block, `release(slot)` when a sequence retires (blocks
+    return to the free list — slot reclamation), and `reset_slot(slot)` when
+    a new request is admitted (zeroes the slot's recurrent state; token
+    blocks need no zeroing, stale values are masked by position).
+    """
+
+    def __init__(self, cfg: ArchConfig, n_slots: int, max_len: int, *,
+                 paged: bool = True, block_size: int = 16,
+                 n_blocks: int | None = None):
+        assert max_len % block_size == 0, \
+            f"max_len {max_len} must be a multiple of block_size {block_size}"
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.paged = paged
+        self.block_size = block_size
+        self.max_blocks = max_len // block_size
+        if n_blocks is None:
+            n_blocks = n_slots * self.max_blocks
+        self.n_blocks = n_blocks
+        self.sentinel = n_blocks
+        self.caches = init_cache(cfg, n_slots, max_len, paged=paged,
+                                 n_blocks=n_blocks, block_size=block_size)
+        self._table = np.full((n_slots, self.max_blocks), self.sentinel,
+                              np.int32)
+        self._free = list(range(n_blocks - 1, -1, -1))  # pop() -> block 0 first
+        self._owned: list[list[int]] = [[] for _ in range(n_slots)]
+        self._committed = [0] * n_slots  # reserved blocks per admitted seq
+        self._table_dev = None
+
+    # ---- block accounting ----
+
+    @property
+    def free_block_count(self) -> int:
+        return len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return math.ceil(n_tokens / self.block_size)
+
+    def can_ever_admit(self, total_tokens: int) -> bool:
+        """Is a sequence of total_tokens servable by this pool at all?"""
+        if total_tokens > self.max_len:
+            return False
+        return (not self.paged) or self.blocks_for(total_tokens) <= self.n_blocks
+
+    def can_admit(self, total_tokens: int) -> bool:
+        """Admission check: can a sequence of total_tokens be fully served
+        alongside every already-admitted sequence?
+
+        Blocks are allocated lazily (`ensure`), so the check subtracts the
+        outstanding COMMITMENTS of admitted sequences (reserved via
+        `commit`, not yet allocated) — otherwise two growing sequences could
+        both pass admission and later exhaust the pool mid-decode."""
+        if total_tokens > self.max_len:
+            return False
+        if not self.paged:
+            return True
+        outstanding = sum(c - len(o)
+                          for c, o in zip(self._committed, self._owned))
+        return (self.free_block_count - outstanding
+                >= self.blocks_for(total_tokens))
+
+    def commit(self, slot: int, total_tokens: int) -> None:
+        """Reserve (without allocating) the blocks `slot` will grow into."""
+        self._committed[slot] = self.blocks_for(total_tokens)
+
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        """Allocate blocks so positions [0, n_tokens) of `slot` are backed."""
+        if not self.paged:
+            if n_tokens > self.max_len:
+                raise OutOfBlocks(f"slot {slot}: {n_tokens} > max_len")
+            return
+        need = self.blocks_for(n_tokens)
+        owned = self._owned[slot]
+        while len(owned) < need:
+            if not self._free:
+                raise OutOfBlocks(f"slot {slot}: pool exhausted")
+            blk = self._free.pop()
+            self._table[slot, len(owned)] = blk
+            owned.append(blk)
+            self._table_dev = None
+
+    def release(self, slot: int) -> None:
+        """Return the slot's blocks to the free list (slot reclamation)."""
+        self._committed[slot] = 0
+        if not self.paged:
+            return
+        blocks = self._owned[slot]
+        if blocks:
+            self._free.extend(reversed(blocks))
+            self._owned[slot] = []
+            self._table[slot, :] = self.sentinel
+            self._table_dev = None
+
+    def table_device(self):
+        """Device copy of the block table (None in dense mode)."""
+        if not self.paged:
+            return None
+        if self._table_dev is None:
+            self._table_dev = jnp.asarray(self._table)
+        return self._table_dev
+
+    # ---- slot state ----
+
+    def reset_slot(self, slot: int) -> None:
+        """Zero the recurrent state of `slot` (new sequence admitted)."""
+        self.caches = _map_state_kinds(
+            self.caches, lambda leaf: leaf.at[:, slot].set(0))

@@ -1,0 +1,80 @@
+"""Quantize-once NVFP4 weight cache.
+
+The paper's forward quantizers (RTN, 4/6) are deterministic, so a weight's
+NVFP4 image is a pure function of the weight: serving can quantize + pack
+every linear weight ONCE offline and reuse the packed tensors forever,
+instead of re-running weight quantization inside every decode step. The
+packed form (`core.linear.PackedQWeight`) stores 4-bit codes two-per-byte
+plus e4m3 group scales — 4.5 bits/element at rest, the memory-bandwidth
+lever NVFP4 serving exists for — and round-trips bit-exactly, so prequant
+decode logits are IDENTICAL to per-step quantization (tests/test_serve.py
+asserts this).
+
+Selection is by leaf name: exactly the weights the decode path feeds through
+`qlinear` get packed. Deliberately excluded:
+
+  - `wkv_b` (MLA): absorbed-form decode consumes it as a raw matrix
+    (models/mla.py) — packing it would change decode numerics.
+  - `router` (MoE), RWKV token-shift/decay LoRA (`mix_w1`, `mix_w2`, `ww1`,
+    `ww2`), RG-LRU gates (`wa`, `wx`) and convs: fp32 non-quantized matmuls.
+  - embeddings, norms, biases: not GEMM weights.
+  - `head`: packed only when cfg.quantize_lm_head (paper keeps it bf16).
+
+Stacked leaves — (layers, N, K) scan stacks and (layers, E, f, d) expert
+stacks — are packed per-matrix via vmap over the leading axes, matching the
+per-layer / per-expert scale granularity of the per-step path.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.core import linear as L
+from repro.core import schemes as S
+
+# leaf names that flow through qlinear on the decode path
+QUANT_KEYS = frozenset({
+    "wq", "wk", "wv", "wo",            # gqa / lattn projections, rwkv r/k/v
+    "wi", "wg",                        # mlp / moe experts, rwkv gate
+    "wr",                              # rwkv receptance
+    "wq_a", "wq_b", "wkv_a",           # mla down/up projections (not wkv_b!)
+    "w_in", "w_gate", "w_out",         # griffin recurrent block
+    "cm_wr", "cm_wk", "cm_wv",         # rwkv channel-mix
+})
+
+
+def _leaf_key(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "name", last)))
+
+
+def _pack_stacked(leaf: jax.Array, kind: str) -> L.PackedQWeight:
+    """Pack a (..., N, K) stack as independent 2D matrices."""
+    lead = leaf.shape[:-2]
+    flat = leaf.reshape((-1, *leaf.shape[-2:]))
+    packed = jax.vmap(lambda m: L.pack_weight(m, kind))(flat)
+    return L.PackedQWeight(*(a.reshape(*lead, *a.shape[1:]) for a in packed))
+
+
+def prequantize(params, cfg: ArchConfig, scheme: str):
+    """Return a params pytree with decode-path weights replaced by
+    PackedQWeight stacks. No-op for non-weight-quantizing schemes."""
+    sch = S.get(scheme)
+    if sch.fwd_w == "none":
+        return params
+    kind = sch.fwd_w
+
+    def maybe_pack(path, leaf):
+        if isinstance(leaf, L.PackedQWeight):
+            raise ValueError("params already prequantized")
+        if leaf.ndim < 2 or _leaf_key(path) not in QUANT_KEYS:
+            return leaf
+        return _pack_stacked(leaf, kind)
+
+    out = dict(params)
+    out["stages"] = jax.tree_util.tree_map_with_path(
+        maybe_pack, params["stages"])
+    if cfg.quantize_lm_head and "head" in params:
+        out["head"] = L.pack_weight(params["head"], kind)
+    return out

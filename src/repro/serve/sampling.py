@@ -1,0 +1,44 @@
+"""Token sampling for the serving engine: greedy / temperature / top-k.
+
+One batched, jittable kernel handles the whole slot batch with PER-SLOT
+parameters (continuous batching mixes requests with different sampling
+settings in one decode step): temperature == 0 selects greedy argmax for
+that row; top_k == 0 disables the top-k filter. Stochastic rows use the
+Gumbel-max trick, which keeps everything a single argmax — no categorical
+resampling, no host sync.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration (greedy by default)."""
+    temperature: float = 0.0
+    top_k: int = 0
+
+
+def sample_tokens(logits: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, key: jax.Array) -> jax.Array:
+    """logits (B, V) -> token ids (B,) under per-row sampling params.
+
+    temperature (B,) float32: 0 => greedy argmax for that row.
+    top_k (B,) int32: 0 => no filter; else keep the k highest-logit tokens.
+    """
+    lf = logits.astype(jnp.float32)
+    b, v = lf.shape
+    # per-row top-k threshold (k == 0 -> keep everything)
+    srt = jnp.sort(lf, axis=-1)[:, ::-1]                     # descending
+    kidx = jnp.clip(jnp.where(top_k > 0, top_k, v) - 1, 0, v - 1)
+    thresh = jnp.take_along_axis(srt, kidx[:, None], axis=-1)
+    masked = jnp.where(lf >= thresh, lf, -jnp.inf)
+    g = jax.random.gumbel(key, lf.shape, jnp.float32)
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    stoch = masked / t + g
+    z = jnp.where(temperature[:, None] > 0, stoch, lf)       # greedy rows
+    return jnp.argmax(z, axis=-1).astype(jnp.int32)

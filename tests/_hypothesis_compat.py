@@ -1,0 +1,110 @@
+"""Seeded-random fallback for `hypothesis` when the real package is absent.
+
+The container cannot pip-install offline, so the property tests fall back to
+this shim: `given` draws `max_examples` pseudo-random examples from the
+declared strategies using a PRNG seeded by the test's qualified name —
+deterministic across runs, so failures reproduce. Only the strategy surface
+this repo actually uses is implemented (floats / integers / sampled_from /
+tuples / booleans); anything fancier should use the real package.
+
+Usage (at the top of a test module):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random as _random
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: _random.Random):
+        return self._sample(rng)
+
+
+class strategies:  # noqa: N801 — mimics the `hypothesis.strategies` module
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        lo, hi = float(min_value), float(max_value)
+        edges = [lo, hi, 0.5 * (lo + hi)]
+
+        def draw(rng):
+            # occasionally hit the boundaries, like hypothesis does
+            if rng.random() < 0.15:
+                return rng.choice(edges)
+            return rng.uniform(lo, hi)
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30, **_kw):
+        lo, hi = int(min_value), int(max_value)
+
+        def draw(rng):
+            if rng.random() < 0.15:
+                return rng.choice([lo, hi])
+            return rng.randint(lo, hi)
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: rng.choice(seq))
+
+    @staticmethod
+    def tuples(*strats):
+        return _Strategy(lambda rng: tuple(s.sample(rng) for s in strats))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+st = strategies
+
+
+def given(*strats, **kw_strats):
+    """Decorator: run the test once per drawn example (deterministic seed)."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args):  # args is () or (self,)
+            n = getattr(wrapper, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = _random.Random(f"hypothesis-compat:{fn.__qualname__}")
+            for _ in range(n):
+                pos = [s.sample(rng) for s in strats]
+                kws = {k: s.sample(rng) for k, s in kw_strats.items()}
+                fn(*args, *pos, **kws)
+
+        # pytest must not see the strategy-filled params (it would treat them
+        # as fixtures): expose only the leading params (e.g. `self`).
+        params = list(inspect.signature(fn).parameters.values())
+        keep = params[: len(params) - len(strats) - len(kw_strats)]
+        wrapper.__signature__ = inspect.Signature(keep)
+        del wrapper.__wrapped__
+        wrapper._compat_given = True
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples=None, deadline=None, **_kw):
+    """Decorator: records max_examples for the shim `given` (deadline ignored)."""
+
+    def deco(fn):
+        if max_examples is not None:
+            fn._compat_max_examples = int(max_examples)
+        return fn
+
+    return deco
