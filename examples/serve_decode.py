@@ -33,6 +33,12 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--legacy", action="store_true",
                     help="seed fixed-batch greedy loop (baseline)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative tokens per round (0 = off); the "
+                         "emitted greedy stream is bitwise unchanged")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="truncated-stack draft depth (default: half the "
+                         "stack when --spec-k > 0)")
     ap.add_argument("--no-prequant", action="store_true")
     ap.add_argument("--dense", action="store_true",
                     help="dense per-slot caches instead of the paged pool")
@@ -57,11 +63,15 @@ def main():
         print("sample token ids:", gen[0, :12].tolist())
         return
 
-    max_len = ((s + args.tokens) // 16 + 2) * 16
+    draft_layers = args.draft_layers
+    if args.spec_k > 0 and draft_layers == 0:
+        from repro.models.lm import total_layers
+        draft_layers = max(1, total_layers(cfg) // 2)
+    max_len = ((s + args.tokens + args.spec_k) // 16 + 2) * 16
     eng = ServeEngine(cfg, params, EngineConfig(
         n_slots=b, max_len=max_len, prefill_chunk=16,
         paged=not args.dense, prequant=not args.no_prequant,
-        scheme=args.scheme))
+        scheme=args.scheme, spec_k=args.spec_k, draft_layers=draft_layers))
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k)
     ids = [eng.submit(Request(prompt=p, max_new=args.tokens, sampling=sp))
            for p in prompts]
@@ -76,6 +86,12 @@ def main():
     print(f"decode:  {st['decode_tokens']} tokens over {st['decode_steps']} "
           f"steps = {st['decode_tokens']/max(st['decode_s'],1e-9):.1f} tok/s "
           f"({backend})")
+    if args.spec_k > 0:
+        acc = st["accepted_tokens"] / max(st["draft_tokens"], 1)
+        print(f"spec:    {st['spec_rounds']} rounds, spec_k={args.spec_k}, "
+              f"draft_layers={draft_layers}, "
+              f"accepted {st['accepted_tokens']}/{st['draft_tokens']} "
+              f"drafts (rate {acc:.2f})")
     print(f"end-to-end: {wall*1e3:.0f}ms, slots={b}, "
           f"pool blocks free {eng.pool.free_block_count}/{eng.pool.n_blocks}")
     print("sample token ids:", results[ids[0]].tokens[:12])

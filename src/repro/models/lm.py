@@ -59,6 +59,65 @@ def layer_specs(cfg: ArchConfig) -> list[tuple[tuple[tuple[str, str], ...], int]
     return [(((mixer, ff),), cfg.n_layers)]
 
 
+def total_layers(cfg: ArchConfig) -> int:
+    return sum(count * len(pattern) for pattern, count in layer_specs(cfg))
+
+
+def _prefix_plan(cfg: ArchConfig, n_prefix: int):
+    """Cut layer_specs after the first `n_prefix` layers.
+
+    Returns (specs, plan) where plan entries (si, rep_start, reps, pat_len)
+    select `reps` repetitions of stage `si` starting at repetition
+    `rep_start`, truncated to the first `pat_len` layers of the pattern.
+    A cut inside a hybrid pattern yields a trailing partial entry (reps=1),
+    so any 0 < n_prefix < total_layers is a valid draft depth.
+    """
+    specs = layer_specs(cfg)
+    total = total_layers(cfg)
+    if not 0 < n_prefix < total:
+        raise ValueError(
+            f"prefix depth must satisfy 0 < n < {total}, got {n_prefix}")
+    plan, left = [], n_prefix
+    for si, (pattern, count) in enumerate(specs):
+        if left <= 0:
+            break
+        per = len(pattern)
+        reps = min(count, left // per)
+        if reps:
+            plan.append((si, 0, reps, per))
+            left -= reps * per
+        if left and reps < count:
+            plan.append((si, reps, 1, left))
+            left = 0
+    return specs, plan
+
+
+def prefix_specs(cfg: ArchConfig, n_prefix: int):
+    """layer_specs truncated to the first n_prefix layers (draft stack)."""
+    specs, plan = _prefix_plan(cfg, n_prefix)
+    return [(specs[si][0][:plen], reps) for si, _, reps, plen in plan]
+
+
+def prefix_stage_params(params, cfg: ArchConfig, n_prefix: int):
+    """Stage-param views positionally aligned with prefix_specs.
+
+    Slices the stacked (count, ...) leaves, so the draft reuses the full
+    model's parameters — including PackedQWeight stacks — with the SAME
+    per-layer ids (and therefore the same quantization site seeds) as the
+    first n_prefix layers of the full forward.
+    """
+    specs, plan = _prefix_plan(cfg, n_prefix)
+    out = []
+    for si, r0, reps, plen in plan:
+        sp = params["stages"][si]
+        sub = {f"l{i}": sp[f"l{i}"] for i in range(plen)}
+        if r0 == 0 and reps == specs[si][1] and plen == len(specs[si][0]):
+            out.append(sub)
+        else:
+            out.append(jax.tree.map(lambda x: x[r0:r0 + reps], sub))
+    return out
+
+
 def _mixer_init(key, mixer: str, cfg):
     if mixer in ("gqa", "lattn"):
         return A.gqa_init(key, cfg)
@@ -239,13 +298,13 @@ def _cross_attend(p, h, enc_out, cfg, scheme, seed, layer_id):
 # cache construction
 # --------------------------------------------------------------------------
 
-def _layer_cache(spec, cfg, batch: int, max_len: int):
+def _layer_cache(spec, cfg, batch: int, max_len: int, *, lattn_ring: bool = True):
     mixer, ff = spec
     hd = cfg.hd
     c: dict[str, Any] = {}
     if mixer in ("gqa", "lattn"):
         cap = max_len
-        if mixer == "lattn" and cfg.griffin:
+        if mixer == "lattn" and cfg.griffin and lattn_ring:
             cap = min(max_len, cfg.griffin.window)
         kv = jnp.zeros((batch, cap, cfg.n_kv_heads, hd), jnp.bfloat16)
         c["kv"] = (kv, kv)
@@ -264,11 +323,17 @@ def _layer_cache(spec, cfg, batch: int, max_len: int):
     return c
 
 
-def init_cache(cfg: ArchConfig, batch: int, max_len: int):
-    """Stacked cache pytree aligned with layer_specs(cfg)."""
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *,
+               lattn_ring: bool = True):
+    """Stacked cache pytree aligned with layer_specs(cfg).
+
+    lattn_ring=False allocates full max_len capacity for sliding-window
+    layers instead of a window-sized ring (required for ragged batches:
+    the prefill ring roll assumes one shared prompt length)."""
     stages = []
     for pattern, count in layer_specs(cfg):
-        one = {f"l{i}": _layer_cache(pattern[i], cfg, batch, max_len)
+        one = {f"l{i}": _layer_cache(pattern[i], cfg, batch, max_len,
+                                     lattn_ring=lattn_ring)
                for i in range(len(pattern))}
         stages.append(jax.tree.map(
             lambda x: jnp.broadcast_to(x, (count, *x.shape)), one))
@@ -383,6 +448,39 @@ def forward(params, cfg: ArchConfig, inputs, scheme: str, seed: jax.Array,
         return x, caches, aux
     logits = lm_head(x, head_weight(params, cfg), cfg.quantize_lm_head, scheme, seed)
     return logits, caches, aux
+
+
+def forward_prefix(params, cfg: ArchConfig, inputs, scheme: str,
+                   seed: jax.Array, *, n_prefix: int, caches=None,
+                   mode: str = "decode", pos=None, active=None,
+                   block_table=None):
+    """Early-exit forward: the first `n_prefix` layers + final norm + head.
+
+    This is the self-speculative DRAFT stack (serve/spec_decode.py): it
+    reuses the full model's (possibly prequantized) parameters and shared LM
+    head — no second model — and runs layers with the same ids/site seeds as
+    the full forward, so a draft layer computes bit-for-bit what the same
+    layer computes inside the full stack. `caches` must be a prefix-shaped
+    pytree (kv_pool.init_cache with specs=prefix_specs(cfg, n_prefix))."""
+    if cfg.enc_dec:
+        raise NotImplementedError("enc-dec draft stacks are not supported")
+    specs = prefix_specs(cfg, n_prefix)
+    sub = {"stages": prefix_stage_params(params, cfg, n_prefix)}
+    x = embed_lookup(params["embed"], inputs["tokens"])
+    b, s = x.shape[:2]
+    if mode == "decode":
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+        positions = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    else:
+        positions = jnp.arange(s)[None, :]
+    x, new_caches, aux = _run_stages(sub, x, cfg, scheme, seed, mode=mode,
+                                     caches=caches, pos=pos,
+                                     positions=positions, stages=specs,
+                                     active=active, block_table=block_table)
+    x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    logits = lm_head(x, head_weight(params, cfg), cfg.quantize_lm_head,
+                     scheme, seed)
+    return logits, new_caches, aux
 
 
 # --------------------------------------------------------------------------

@@ -3,9 +3,12 @@
 Modules (import them directly; this package init stays import-free so the
 model code can reach `repro.serve.kv_pool` without cycles):
 
-    engine    — ServeEngine: continuous batching, admission control, slots
-    kv_pool   — block-based paged KV pool + per-sequence block tables
-    prequant  — quantize-once NVFP4 weight cache
-    sampling  — greedy / temperature / top-k token sampling
-    decode    — thin compatibility wrappers (prefill/serve steps, greedy loop)
+    engine      — ServeEngine: continuous batching, admission control, slots
+    kv_pool     — block-based paged KV pool + per-sequence block tables,
+                  truncate/rollback API, recurrent-state snapshots
+    spec_decode — self-speculative draft/verify loop (truncated-stack draft,
+                  exact bitwise greedy verification)
+    prequant    — quantize-once NVFP4 weight cache
+    sampling    — greedy / temperature / top-k sampling + spec acceptance
+    decode      — thin compatibility wrappers (prefill/serve steps, greedy loop)
 """

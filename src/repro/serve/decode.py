@@ -61,14 +61,21 @@ def greedy_generate(params, cfg, scheme, prompt_tokens, max_new: int,
     max_len = max_len or (s + max_new + 8)
     if cfg.enc_dec:
         raise NotImplementedError("use explicit enc-dec path in examples")
-    if prompt_lens is not None and cfg.family in ("ssm", "hybrid"):
+    has_recurrent_state = cfg.family == "ssm" or (
+        cfg.family == "hybrid" and any(t == "rec" for t in cfg.griffin.pattern))
+    if prompt_lens is not None and has_recurrent_state:
         raise NotImplementedError(
             "ragged prompts on recurrent-state archs: the full-width prefill "
             "would feed pad tokens into wkv/lru state — use serve.engine."
             "ServeEngine, which prefills each sequence at its true length")
     lens = (jnp.full((b,), s, jnp.int32) if prompt_lens is None
             else jnp.asarray(prompt_lens, jnp.int32))
-    cache = lm.init_cache(cfg, b, max_len)
+    # Ragged batches need full-capacity sliding-window caches: the ring
+    # prefill roll keeps the last `window` positions of the SHARED padded
+    # width, which for a short row can evict real keys in favour of pads
+    # that then alias earlier absolute positions. Window masking on a flat
+    # cache is exact for every row.
+    cache = lm.init_cache(cfg, b, max_len, lattn_ring=prompt_lens is None)
     prefill = jax.jit(make_prefill_step(cfg, scheme))
     step = jax.jit(make_serve_step(cfg, scheme))
     logits, cache = prefill(params, cache, {"tokens": prompt_tokens})

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import lm
+from repro.serve import spec_decode
 from repro.serve.kv_pool import KVPool
 from repro.serve.prequant import prequantize
 from repro.serve.sampling import SamplingParams, sample_tokens
@@ -78,6 +79,10 @@ class EngineConfig:
     scheme: str = "quartet2"
     max_queue: int = 256
     base_seed: int = 0
+    # self-speculative decoding (serve/spec_decode.py): propose spec_k tokens
+    # per round with the first draft_layers blocks, verify in one chunk
+    spec_k: int = 0               # 0 disables speculation
+    draft_layers: int = 0         # truncated-stack draft depth
 
 
 @dataclass
@@ -88,6 +93,7 @@ class _Slot:
     length: int = 0               # tokens currently in the cache
     last_tok: int = 0
     generated: list[int] = field(default_factory=list)
+    draft_len: int = 0            # tokens the spec draft has consumed
 
 
 class ServeEngine:
@@ -102,6 +108,23 @@ class ServeEngine:
                        else params)
         self.pool = KVPool(cfg, e.n_slots, e.max_len, paged=e.paged,
                            block_size=e.block_size, n_blocks=e.n_blocks)
+        if e.spec_k > 0:
+            if e.draft_layers <= 0:
+                raise ValueError("spec_k > 0 requires draft_layers >= 1")
+            if cfg.rwkv is not None and e.spec_k + 1 >= cfg.rwkv.chunk:
+                # the (n_slots, spec_k+1) verify chunk must stay on the
+                # per-token WKV tail path — the chunk-parallel form's
+                # accumulation order differs from S=1 steps, which would
+                # silently break bitwise equality with the non-spec engine
+                raise ValueError(
+                    f"spec_k={e.spec_k} needs spec_k + 1 < rwkv.chunk "
+                    f"({cfg.rwkv.chunk}) for exact verification")
+            self.draft = spec_decode.DraftStack(cfg, self.params, e)
+        else:
+            self.draft = None
+        # a verify chunk writes up to spec_k positions past a sequence's
+        # final token; admission reserves that overshoot margin up front
+        self._margin = e.spec_k
         self.slots = [_Slot() for _ in range(e.n_slots)]
         self.queue: deque[Request] = deque()
         self._ids = itertools.count()
@@ -112,7 +135,9 @@ class ServeEngine:
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0,
                       "prefill_tokens": 0, "decode_tokens": 0,
                       "decode_steps": 0, "ticks": 0,
-                      "admitted": 0, "rejected": 0, "finished": 0}
+                      "admitted": 0, "rejected": 0, "finished": 0,
+                      "spec_rounds": 0, "draft_tokens": 0,
+                      "accepted_tokens": 0}
 
     # ------------------------------------------------------------------
     # public API
@@ -123,7 +148,15 @@ class ServeEngine:
         if len(self.queue) >= self.econf.max_queue:
             self.stats["rejected"] += 1
             raise QueueFull(f"queue at capacity ({self.econf.max_queue})")
-        total = len(request.prompt) + request.max_new
+        # temperature 0 is greedy regardless of top_k (the sampler ignores
+        # the filter on greedy rows), so only a positive temperature makes a
+        # request stochastic
+        if self.econf.spec_k > 0 and request.sampling.temperature != 0.0:
+            raise NotImplementedError(
+                "speculative decoding accepts greedily; stochastic requests "
+                "need the rejection-sampling hook "
+                "(serve.sampling.speculative_resample)")
+        total = len(request.prompt) + request.max_new + self._margin
         if not self.pool.can_ever_admit(total):
             # reject now: an unservable request would head-of-line block the
             # FIFO forever (can_admit never becomes true)
@@ -170,11 +203,17 @@ class ServeEngine:
             if slot.state != FREE:
                 continue
             req = self.queue[0]
-            if not self.pool.can_admit(len(req.prompt) + req.max_new):
+            total = len(req.prompt) + req.max_new + self._margin
+            if not self.pool.can_admit(total) or (
+                    self.draft is not None
+                    and not self.draft.pool.can_admit(total)):
                 break  # FIFO: don't starve the head request
             self.queue.popleft()
             self.pool.reset_slot(i)
-            self.pool.commit(i, len(req.prompt) + req.max_new)
+            self.pool.commit(i, total)
+            if self.draft is not None:
+                self.draft.pool.reset_slot(i)
+                self.draft.pool.commit(i, total)
             self.slots[i] = _Slot(state=PREFILL, req=req)
             self.stats["admitted"] += 1
 
@@ -196,10 +235,17 @@ class ServeEngine:
             active[i] = True
             t0 = time.perf_counter()
             logits = self._forward(size, tokens, pos, active)
+            if self.draft is not None:
+                # the draft cache covers the prompt too: same chunk through
+                # the prefix stack (its layers recompute what the first
+                # draft_layers of the full forward just computed)
+                self.draft.pool.ensure(i, slot.cursor + size)
+                self.draft.forward(size, tokens, pos, active)
             jax.block_until_ready(logits)  # else async compute leaks into decode_s
             self.stats["prefill_s"] += time.perf_counter() - t0
             self.stats["prefill_tokens"] += size
             slot.cursor += size
+            slot.draft_len = slot.cursor
             if slot.cursor == len(prompt):
                 # prompt fully cached: sample the first generated token from
                 # the logits of the prompt's last position
@@ -223,10 +269,21 @@ class ServeEngine:
                                               list(slot.req.prompt),
                                               list(slot.generated)))
                 self.pool.release(i)
+                if self.draft is not None:
+                    self.draft.pool.release(i)
                 self.slots[i] = _Slot()
                 self.stats["finished"] += 1
                 dec.remove(i)
         if not dec:
+            return finished
+
+        if e.spec_k > 0:
+            t0 = time.perf_counter()
+            emitted = spec_decode.spec_round(self, dec)
+            jax.block_until_ready(jax.tree.leaves(self.pool.caches)[0])
+            self.stats["decode_s"] += time.perf_counter() - t0
+            self.stats["decode_tokens"] += emitted
+            self.stats["decode_steps"] += 1
             return finished
 
         tokens = np.zeros((e.n_slots, 1), np.int32)

@@ -114,10 +114,13 @@ def _layer_cache(spec, cfg: ArchConfig, n_slots: int, max_len: int, *,
 
 
 def init_cache(cfg: ArchConfig, n_slots: int, max_len: int, *, paged: bool,
-               n_blocks: int, block_size: int):
-    """Stage-aligned serving cache pytree (pool layout when paged)."""
+               n_blocks: int, block_size: int, specs=None):
+    """Stage-aligned serving cache pytree (pool layout when paged).
+
+    `specs` overrides lm.layer_specs(cfg) — used by the speculative DRAFT
+    pool, whose cache covers only lm.prefix_specs(cfg, draft_layers)."""
     stages = []
-    for pattern, count in lm.layer_specs(cfg):
+    for pattern, count in (specs if specs is not None else lm.layer_specs(cfg)):
         one = {f"l{i}": _layer_cache(pattern[i], cfg, n_slots, max_len,
                                      paged=paged, n_blocks=n_blocks,
                                      block_size=block_size)
@@ -147,19 +150,27 @@ class OutOfBlocks(RuntimeError):
     pass
 
 
+class SlotError(RuntimeError):
+    """Allocator misuse: double-free, or operating on an unbound slot."""
+
+
 class KVPool:
     """Host-side block allocator + owner of the device cache pytree.
 
-    The engine calls `ensure(slot, n)` before each forward so every position
-    < n has a backing block, `release(slot)` when a sequence retires (blocks
-    return to the free list — slot reclamation), and `reset_slot(slot)` when
-    a new request is admitted (zeroes the slot's recurrent state; token
-    blocks need no zeroing, stale values are masked by position).
+    Slot lifecycle: `reset_slot(slot)` (zero recurrent state of an UNBOUND
+    slot) -> `commit(slot, total)` (bind + reserve growth) -> `ensure(slot,
+    n)` before each forward so every position < n has a backing block ->
+    optionally `truncate(slot, n)` (speculative rollback: logical shrink,
+    no block churn) -> `release(slot)` (unbind; blocks return to the free
+    list). Misuse — releasing an unbound slot (double-free), committing a
+    bound slot, ensure/truncate outside a binding — raises SlotError rather
+    than silently corrupting the free-list accounting. Token blocks are
+    never zeroed: stale values sit behind the position mask.
     """
 
     def __init__(self, cfg: ArchConfig, n_slots: int, max_len: int, *,
                  paged: bool = True, block_size: int = 16,
-                 n_blocks: int | None = None):
+                 n_blocks: int | None = None, specs=None):
         assert max_len % block_size == 0, \
             f"max_len {max_len} must be a multiple of block_size {block_size}"
         self.cfg = cfg
@@ -172,13 +183,20 @@ class KVPool:
             n_blocks = n_slots * self.max_blocks
         self.n_blocks = n_blocks
         self.sentinel = n_blocks
+        self.specs = specs if specs is not None else lm.layer_specs(cfg)
         self.caches = init_cache(cfg, n_slots, max_len, paged=paged,
-                                 n_blocks=n_blocks, block_size=block_size)
+                                 n_blocks=n_blocks, block_size=block_size,
+                                 specs=self.specs)
+        self.has_state_kinds = any(
+            mixer in ("rwkv_tm", "rec") or ff == "rwkv_cm"
+            for pattern, _ in self.specs for mixer, ff in pattern)
         self._table = np.full((n_slots, self.max_blocks), self.sentinel,
                               np.int32)
         self._free = list(range(n_blocks - 1, -1, -1))  # pop() -> block 0 first
         self._owned: list[list[int]] = [[] for _ in range(n_slots)]
         self._committed = [0] * n_slots  # reserved blocks per admitted seq
+        self._bound = [False] * n_slots  # slot currently holds a sequence
+        self._lengths = [0] * n_slots    # logical tokens backed per slot
         self._table_dev = None
 
     # ---- block accounting ----
@@ -214,17 +232,29 @@ class KVPool:
                 >= self.blocks_for(total_tokens))
 
     def commit(self, slot: int, total_tokens: int) -> None:
-        """Reserve (without allocating) the blocks `slot` will grow into."""
+        """Bind `slot` and reserve (without allocating) its growth blocks."""
+        if self._bound[slot]:
+            raise SlotError(f"slot {slot}: commit on a bound slot "
+                            "(release it first)")
+        if total_tokens > self.max_len:
+            raise OutOfBlocks(f"slot {slot}: {total_tokens} > max_len")
+        self._bound[slot] = True
         self._committed[slot] = self.blocks_for(total_tokens)
 
     def ensure(self, slot: int, n_tokens: int) -> None:
         """Allocate blocks so positions [0, n_tokens) of `slot` are backed."""
+        if not self._bound[slot]:
+            raise SlotError(f"slot {slot}: ensure on an unbound slot")
         if not self.paged:
             if n_tokens > self.max_len:
                 raise OutOfBlocks(f"slot {slot}: {n_tokens} > max_len")
+            self._lengths[slot] = max(self._lengths[slot], n_tokens)
             return
         need = self.blocks_for(n_tokens)
         owned = self._owned[slot]
+        if need > self.max_blocks:
+            raise OutOfBlocks(f"slot {slot}: {n_tokens} tokens exceed the "
+                              f"{self.max_blocks}-entry block table")
         while len(owned) < need:
             if not self._free:
                 raise OutOfBlocks(f"slot {slot}: pool exhausted")
@@ -232,10 +262,35 @@ class KVPool:
             self._table[slot, len(owned)] = blk
             owned.append(blk)
             self._table_dev = None
+        self._lengths[slot] = max(self._lengths[slot], n_tokens)
+
+    def truncate(self, slot: int, n_tokens: int) -> None:
+        """Logically shrink `slot` to n_tokens positions (spec rollback).
+
+        Rejected draft tokens are dropped WITHOUT block churn: the slot keeps
+        every block it owns (the very next rounds grow back into them), and
+        stale values past n_tokens stay invisible behind the position mask
+        until overwritten. Only the logical length moves."""
+        if not self._bound[slot]:
+            raise SlotError(f"slot {slot}: truncate on an unbound slot")
+        if n_tokens < 0 or n_tokens > self._lengths[slot]:
+            raise SlotError(
+                f"slot {slot}: truncate to {n_tokens} outside "
+                f"[0, {self._lengths[slot]}]")
+        self._lengths[slot] = n_tokens
+
+    def length(self, slot: int) -> int:
+        """Logical backed length of `slot` (ensure grows it, truncate cuts)."""
+        return self._lengths[slot]
 
     def release(self, slot: int) -> None:
-        """Return the slot's blocks to the free list (slot reclamation)."""
+        """Unbind `slot`, returning its blocks to the free list."""
+        if not self._bound[slot]:
+            raise SlotError(f"slot {slot}: release on an unbound slot "
+                            "(double-free?)")
+        self._bound[slot] = False
         self._committed[slot] = 0
+        self._lengths[slot] = 0
         if not self.paged:
             return
         blocks = self._owned[slot]
@@ -256,6 +311,54 @@ class KVPool:
     # ---- slot state ----
 
     def reset_slot(self, slot: int) -> None:
-        """Zero the recurrent state of `slot` (new sequence admitted)."""
+        """Zero the recurrent state of `slot` (new sequence admitted).
+
+        Only valid on an UNBOUND slot: resetting a live sequence's state
+        would silently corrupt it, so that is a SlotError."""
+        if self._bound[slot]:
+            raise SlotError(f"slot {slot}: reset_slot on a bound slot")
         self.caches = _map_state_kinds(
             self.caches, lambda leaf: leaf.at[:, slot].set(0))
+
+    # ---- speculative rollback of recurrent state -------------------------
+    #
+    # Token kinds truncate for free (position-masked); the recurrent kinds
+    # (wkv / tm_prev / cm_prev / lru) integrate every token irreversibly, so
+    # rollback is snapshot -> verify chunk -> restore for rejected slots.
+
+    def snapshot_states(self):
+        """Copies of every state-kind leaf (None if this arch has none).
+
+        Real device copies, not references: the engine's jitted step donates
+        the cache pytree, which invalidates the pre-step buffers."""
+        if not self.has_state_kinds:
+            return None
+        out = []
+        for stage in self.caches:
+            ns = {}
+            for lk, kinds in stage.items():
+                sk = {k: v for k, v in kinds.items() if k in STATE_KINDS}
+                if sk:
+                    ns[lk] = jax.tree.map(lambda x: jnp.array(x, copy=True),
+                                          sk)
+            out.append(ns)
+        return out
+
+    def restore_states(self, snapshot, slots) -> None:
+        """Write `slots`' rows of every state-kind leaf back from snapshot."""
+        if snapshot is None or not slots:
+            return
+        idx = np.asarray(list(slots), np.int32)
+
+        def put(cur, snap):
+            return cur.at[:, idx].set(snap[:, idx])
+
+        new = []
+        for stage, sstage in zip(self.caches, snapshot):
+            ns = {}
+            for lk, kinds in stage.items():
+                ns[lk] = {k: (jax.tree.map(put, v, sstage[lk][k])
+                              if k in STATE_KINDS else v)
+                          for k, v in kinds.items()}
+            new.append(ns)
+        self.caches = new

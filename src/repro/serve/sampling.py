@@ -42,3 +42,44 @@ def sample_tokens(logits: jax.Array, temperature: jax.Array,
     stoch = masked / t + g
     z = jnp.where(temperature[:, None] > 0, stoch, lf)       # greedy rows
     return jnp.argmax(z, axis=-1).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# speculative acceptance (serve/spec_decode.py)
+# --------------------------------------------------------------------------
+
+def greedy_targets(logits: jax.Array) -> jax.Array:
+    """Verify-chunk logits (B, S, V) -> greedy target ids (B, S).
+
+    Chunk index j holds the model's prediction for position pos+j+1; the
+    bf16 -> fp32 cast the greedy sampler applies is order-preserving, so
+    argmax here selects exactly the token `sample_tokens` would at
+    temperature 0."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def accept_greedy(drafts, targets) -> int:
+    """Longest accepted prefix: count of leading j with draft_j == target_j.
+
+    The emitted tokens for the round are targets[: accepted + 1] — the
+    accepted drafts (which equal their targets) plus the model's own
+    correction/bonus token, so the stream is exactly the full model's
+    greedy output."""
+    a = 0
+    while a < len(drafts) and int(drafts[a]) == int(targets[a]):
+        a += 1
+    return a
+
+
+def speculative_resample(draft_tokens, draft_logits, target_logits, key):
+    """Rejection-sampling hook for stochastic speculative decoding.
+
+    The standard scheme (accept d with prob min(1, p_target/p_draft), else
+    resample from the renormalized residual) preserves the target
+    distribution EXACTLY — and because this engine's forward is
+    deterministic given the per-request key, even the stochastic stream
+    would be reproducible. Not yet wired: the engine enforces greedy
+    sampling when spec_k > 0 and routes stochastic requests here."""
+    raise NotImplementedError(
+        "stochastic speculative acceptance is not implemented; use "
+        "temperature=0 (greedy) with spec_k > 0")

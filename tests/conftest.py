@@ -1,0 +1,31 @@
+"""Shared fixtures: one seed to rule every test's randomness.
+
+Determinism policy (tier-1 must be reproducible run-to-run): tests derive
+ALL randomness — jax PRNG keys, numpy RandomStates, prompt contents — from
+the `base_seed` fixture (or an explicit literal), never from entropy
+sources. The `_hypothesis_compat` shim already seeds itself from the test's
+qualified name, so property tests reproduce too.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+BASE_SEED = 0
+
+
+@pytest.fixture(scope="session")
+def base_seed() -> int:
+    return BASE_SEED
+
+
+@pytest.fixture()
+def base_key(base_seed):
+    """Fresh jax PRNG key per test, derived from the shared seed."""
+    return jax.random.PRNGKey(base_seed)
+
+
+@pytest.fixture()
+def np_rng(base_seed):
+    """Fresh numpy RandomState per test, derived from the shared seed."""
+    return np.random.RandomState(base_seed)

@@ -1,0 +1,240 @@
+"""Property-style KVPool allocator suite.
+
+Random alloc/ensure/truncate/release/reset sequences against a host-side
+reference model, checking after every op:
+
+  - free-list conservation: free + sum(owned) == n_blocks, always;
+  - no aliasing: a physical block belongs to at most one slot, and never to
+    both a slot and the free list;
+  - block-table consistency: a slot's table row is exactly its owned blocks
+    followed by the OOB sentinel;
+  - OutOfBlocks raised exactly when the capacity math says so;
+  - misuse (double-free, ops on unbound slots, reset of a live slot) raises
+    SlotError instead of silently corrupting accounting.
+
+Strategies come from tests/_hypothesis_compat.py when hypothesis is absent
+(offline container): examples are seeded by the test's qualified name, so
+failures reproduce deterministically.
+"""
+
+import math
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: seeded-random fallback shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.configs.base import ArchConfig
+from repro.serve.kv_pool import KVPool, OutOfBlocks, SlotError
+
+pytestmark = pytest.mark.serve
+
+N_SLOTS, MAX_LEN, BLOCK = 3, 32, 4
+MAX_BLOCKS = MAX_LEN // BLOCK
+
+
+def _tiny_cfg() -> ArchConfig:
+    """Smallest decode-capable arch: allocator logic is cache-agnostic."""
+    return ArchConfig(name="pool-test", family="dense", n_layers=1,
+                      d_model=32, n_heads=2, n_kv_heads=2, d_ff=32, vocab=64,
+                      head_dim=16)
+
+
+def _pool(n_blocks=10, paged=True) -> KVPool:
+    return KVPool(_tiny_cfg(), N_SLOTS, MAX_LEN, paged=paged,
+                  block_size=BLOCK, n_blocks=n_blocks)
+
+
+class _Ref:
+    """Reference allocator model mirrored against the real pool."""
+
+    def __init__(self, n_blocks):
+        self.n_blocks = n_blocks
+        self.free = n_blocks
+        self.bound = [False] * N_SLOTS
+        self.owned = [0] * N_SLOTS
+        self.length = [0] * N_SLOTS
+
+
+def _check_invariants(pool: KVPool, ref: _Ref):
+    assert pool.free_block_count == ref.free
+    # conservation
+    assert pool.free_block_count + sum(
+        len(o) for o in pool._owned) == pool.n_blocks
+    # no aliasing: every block appears exactly once across free + owned
+    seen = list(pool._free)
+    for o in pool._owned:
+        seen.extend(o)
+    assert sorted(seen) == list(range(pool.n_blocks))
+    # table rows mirror ownership
+    for s in range(N_SLOTS):
+        own = pool._owned[s]
+        assert list(pool._table[s, : len(own)]) == own
+        assert all(pool._table[s, len(own):] == pool.sentinel)
+        assert pool.length(s) == ref.length[s]
+        assert len(own) == ref.owned[s]
+
+
+def _apply(pool: KVPool, ref: _Ref, op, rng: random.Random):
+    slot = rng.randrange(N_SLOTS)
+    if op == "commit":
+        total = rng.randint(1, MAX_LEN + 8)
+        if ref.bound[slot]:
+            with pytest.raises(SlotError):
+                pool.commit(slot, total)
+        elif total > MAX_LEN:
+            with pytest.raises(OutOfBlocks):
+                pool.commit(slot, total)
+        else:
+            pool.commit(slot, total)
+            ref.bound[slot] = True
+    elif op == "ensure":
+        n = rng.randint(1, MAX_LEN)
+        if not ref.bound[slot]:
+            with pytest.raises(SlotError):
+                pool.ensure(slot, n)
+            return
+        if not pool.paged:
+            pool.ensure(slot, n)  # dense: capacity is max_len, no blocks
+            ref.length[slot] = max(ref.length[slot], n)
+            return
+        need = math.ceil(n / BLOCK)
+        extra = max(0, need - ref.owned[slot])
+        if extra > ref.free:
+            # capacity math says no: the pool must raise, consuming at most
+            # what was free (conservation still holds afterwards)
+            with pytest.raises(OutOfBlocks):
+                pool.ensure(slot, n)
+            ref.owned[slot] += ref.free
+            ref.free = 0
+        else:
+            pool.ensure(slot, n)
+            ref.owned[slot] += extra
+            ref.free -= extra
+            ref.length[slot] = max(ref.length[slot], n)
+    elif op == "truncate":
+        n = rng.randint(0, MAX_LEN)
+        if not ref.bound[slot]:
+            with pytest.raises(SlotError):
+                pool.truncate(slot, n)
+        elif n > ref.length[slot]:
+            with pytest.raises(SlotError):
+                pool.truncate(slot, n)
+        else:
+            pool.truncate(slot, n)
+            ref.length[slot] = n  # logical only: owned blocks unchanged
+    elif op == "release":
+        if not ref.bound[slot]:
+            with pytest.raises(SlotError):
+                pool.release(slot)
+        else:
+            pool.release(slot)
+            ref.free += ref.owned[slot]
+            ref.owned[slot] = 0
+            ref.length[slot] = 0
+            ref.bound[slot] = False
+    elif op == "reset":
+        if ref.bound[slot]:
+            with pytest.raises(SlotError):
+                pool.reset_slot(slot)
+        else:
+            pool.reset_slot(slot)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_allocator_random_sequences(seed):
+    rng = random.Random(seed)
+    n_blocks = rng.choice([6, 10, N_SLOTS * MAX_BLOCKS])
+    pool = _pool(n_blocks=n_blocks)
+    ref = _Ref(n_blocks)
+    ops = ["commit", "ensure", "ensure", "truncate", "release", "reset"]
+    for _ in range(50):
+        _apply(pool, ref, rng.choice(ops), rng)
+        _check_invariants(pool, ref)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_allocator_random_sequences_dense(seed):
+    """Dense mode shares the binding/length state machine (no blocks)."""
+    rng = random.Random(seed)
+    pool = _pool(paged=False)
+    ref = _Ref(pool.n_blocks)
+    for _ in range(40):
+        _apply(pool, ref, rng.choice(
+            ["commit", "ensure", "truncate", "release", "reset"]), rng)
+        for s in range(N_SLOTS):
+            assert pool.length(s) == ref.length[s]
+
+
+# ---- explicit guard paths (the satellite's double-free / misuse cases) ----
+
+def test_release_double_free_raises():
+    pool = _pool()
+    pool.commit(0, 8)
+    pool.ensure(0, 8)
+    pool.release(0)
+    with pytest.raises(SlotError):
+        pool.release(0)
+
+
+def test_release_unallocated_slot_raises():
+    pool = _pool()
+    with pytest.raises(SlotError):
+        pool.release(1)
+
+
+def test_reset_bound_slot_raises():
+    pool = _pool()
+    pool.commit(2, 4)
+    with pytest.raises(SlotError):
+        pool.reset_slot(2)
+    pool.release(2)
+    pool.reset_slot(2)  # unbound again: fine
+
+
+def test_ensure_and_truncate_require_binding():
+    pool = _pool()
+    with pytest.raises(SlotError):
+        pool.ensure(0, 4)
+    with pytest.raises(SlotError):
+        pool.truncate(0, 0)
+
+
+def test_truncate_keeps_blocks_no_churn():
+    """Speculative rollback must not return blocks (they are regrown into
+    immediately); only the logical length moves."""
+    pool = _pool()
+    pool.commit(0, 24)
+    pool.ensure(0, 17)            # 5 blocks
+    owned = list(pool._owned[0])
+    free0 = pool.free_block_count
+    pool.truncate(0, 9)
+    assert pool.length(0) == 9
+    assert pool._owned[0] == owned          # same physical blocks
+    assert pool.free_block_count == free0   # nothing churned
+    pool.ensure(0, 17)                      # regrow: no new allocation
+    assert pool._owned[0] == owned
+    with pytest.raises(SlotError):
+        pool.truncate(0, 18)                # beyond current length
+
+
+def test_out_of_blocks_exact_boundary():
+    """OutOfBlocks fires exactly when need exceeds free + owned."""
+    pool = _pool(n_blocks=4)
+    pool.commit(0, 16)
+    pool.ensure(0, 16)            # all 4 blocks
+    pool.commit(1, 4)
+    with pytest.raises(OutOfBlocks):
+        pool.ensure(1, 1)         # pool exhausted
+    pool.release(0)
+    pool.ensure(1, 4)             # now fine
+    # per-slot table capacity is also a hard bound
+    pool2 = _pool(n_blocks=24)
+    pool2.commit(0, MAX_LEN)
+    with pytest.raises(OutOfBlocks):
+        pool2.ensure(0, MAX_LEN + 1)

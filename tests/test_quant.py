@@ -14,6 +14,8 @@ from repro.core import ms_eden as ME
 from repro.core import quant as Q
 from repro.core import rht as R
 
+pytestmark = pytest.mark.quant
+
 
 @pytest.fixture(scope="module")
 def gauss():
@@ -184,6 +186,39 @@ class TestMSEden:
         x = jax.random.normal(jax.random.PRNGKey(4), (128, 256)) ** 3
         o = ME.ms_eden(x, jax.random.PRNGKey(0), jax.random.PRNGKey(1))
         assert float(o.qt.scales.max()) <= F.FP8_MAX
+
+    def test_unbiasedness_regression_vs_sr(self, base_key):
+        """Statistical regression pin (paper Secs. 3-4): over fixed-seed
+        draws on the same tensor, (i) the confidence interval of MS-EDEN's
+        mean dequantization error contains 0 (unbiased), and (ii) MS-EDEN's
+        MSE is decisively below SR's. Cheap enough for tier-1: 256 draws on
+        a 32x128 tensor."""
+        x = jax.random.normal(jax.random.fold_in(base_key, 17), (32, 128))
+        n = 256
+
+        def eden_err(i):
+            k = jax.random.PRNGKey(i)
+            o = ME.ms_eden(x, jax.random.fold_in(k, 0),
+                           jax.random.fold_in(k, 1))
+            return ME.ms_eden_dequant(o, rotated=False) - x
+
+        errs = jax.vmap(eden_err)(jnp.arange(n))       # (n, 32, 128)
+        per_draw_mean = jnp.mean(errs, axis=(1, 2))    # (n,)
+        mean = float(jnp.mean(per_draw_mean))
+        sem = float(jnp.std(per_draw_mean)) / np.sqrt(n)
+        assert abs(mean) <= 3.0 * sem, (mean, sem)     # CI contains 0
+        eden_mse = float(jnp.mean(errs ** 2))
+
+        def sr_err(i):
+            return Q.dequant(Q.quant_sr(x, jax.random.PRNGKey(i))) - x
+
+        sr_errs = jax.vmap(sr_err)(jnp.arange(64))
+        # SR is unbiased too — but with > 2x the MSE on the same tensors
+        sr_mse = float(jnp.mean(sr_errs ** 2))
+        assert sr_mse > 2.0 * eden_mse, (sr_mse, eden_mse)
+        sr_mean = float(jnp.mean(sr_errs))
+        sr_sem = float(jnp.std(jnp.mean(sr_errs, axis=(1, 2)))) / np.sqrt(64)
+        assert abs(sr_mean) <= 3.0 * sr_sem
 
     @settings(max_examples=10, deadline=None)
     @given(st.integers(0, 2**31 - 1),

@@ -29,6 +29,8 @@ from repro.serve.kv_pool import KVPool
 from repro.serve.prequant import prequantize
 from repro.serve.sampling import SamplingParams, sample_tokens
 
+pytestmark = pytest.mark.serve
+
 SEED = jnp.array([7, 7], jnp.uint32)
 
 
@@ -360,6 +362,44 @@ def test_greedy_generate_ragged_prompts():
         solo = greedy_generate(params, cfg, "bf16",
                                jnp.asarray(r[None, :]), 4)
         assert out[i].tolist() == solo[0].tolist(), f"row {i}"
+
+
+def _lattn_cfg():
+    """A pure sliding-window-attention stack: recurrentgemma's hybrid family
+    with every pattern slot set to 'attn' (window=8 so the window binds)."""
+    base = registry.get("recurrentgemma_9b").reduced()
+    return dataclasses.replace(
+        base, griffin=dataclasses.replace(base.griffin, window=8,
+                                          pattern=("attn", "attn")))
+
+
+@pytest.mark.parametrize("make_cfg", [lambda: _cfg("yi_9b"),
+                                      lambda: _cfg("deepseek_v3_671b"),
+                                      _lattn_cfg],
+                         ids=["attention", "mla", "lattn"])
+def test_ragged_prompts_engine_matches_greedy_generate(make_cfg, base_key,
+                                                       np_rng):
+    """Cross-arch ragged-prompt regression (locks in the PR-1 position-vector
+    fix): mixed-length prompts through the legacy greedy loop and through
+    the engine must produce identical tokens for attention / mla / lattn.
+    The lattn case also pins the full-capacity (non-ring) ragged cache."""
+    cfg = make_cfg()
+    params = lm.init(cfg, base_key)
+    lens = [6, 10, 13]
+    rows = [np_rng.randint(0, cfg.vocab, n) for n in lens]
+    padded = np.zeros((3, max(lens)), np.int32)
+    for i, r in enumerate(rows):
+        padded[i, : len(r)] = r
+    legacy = greedy_generate(params, cfg, "bf16", jnp.asarray(padded), 4,
+                             prompt_lens=jnp.asarray(lens))
+    eng = ServeEngine(cfg, params,
+                      EngineConfig(n_slots=3, max_len=64, prefill_chunk=8,
+                                   scheme="bf16", prequant=False))
+    ids = [eng.submit(Request(prompt=list(map(int, r)), max_new=4))
+           for r in rows]
+    res = {r.req_id: r.tokens for r in eng.run()}
+    for i, rid in enumerate(ids):
+        assert res[rid] == legacy[i].tolist(), f"row {i}"
 
 
 def test_sampler_modes():
