@@ -16,6 +16,18 @@ Rows (tok/s = generated tokens per wall-second of decode):
                              reports the accepted-token rate
   serve/engine_poisson     — engine under Poisson request arrival (open-loop
                              traffic; includes prefill interleaving)
+  serve/decode_dense       — decode-path comparison: dense per-slot caches
+  serve/decode_gather      — paged pool through gather_view + decode_sdpa
+                             (materializes a capacity-sized copy per layer)
+  serve/decode_kernel      — paged pool through the block-table flash-decode
+                             Pallas kernel (kernels/paged_attention.py;
+                             interpret mode on CPU, so wall time here is NOT
+                             the story — the modeled bytes/token column is)
+
+The decode_* rows also land in BENCH_serve.json with a modeled
+bytes-moved-per-token estimate: dense and gather traffic scale with POOL
+CAPACITY (max_len), the kernel path with the ACTUAL mean sequence length —
+the bandwidth win the kernel exists for.
 
 Speculation pays in proportion to draft/full agreement, which is a MODEL
 property: random-init weights produce near-tie logits that 4-bit activation
@@ -29,6 +41,8 @@ CPU numbers are relative, like every bench in this harness.
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -94,6 +108,91 @@ def _engine_toks(cfg, params, prompts, max_new, scheme, prequant,
     return total / wall, st
 
 
+def _warm_and_reset(eng, prompt, max_new):
+    """Trigger every step-shape compile with one short request, then zero
+    the stats so measurements exclude first-call jit time."""
+    eng.submit(Request(prompt=prompt, max_new=max_new))
+    eng.run()
+    for k in eng.stats:
+        eng.stats[k] = 0 if isinstance(eng.stats[k], int) else 0.0
+
+
+def _kv_bytes_per_position(cfg):
+    """K/V (or latent) cache bytes one token position occupies, summed over
+    layers — the unit of decode-attention HBM traffic."""
+    per = 0
+    for pattern, count in lm.layer_specs(cfg):
+        for mixer, _ in pattern:
+            if mixer in ("gqa", "lattn"):
+                per += count * 2 * cfg.n_kv_heads * cfg.hd * 2   # K+V bf16
+            elif mixer == "mla":
+                per += count * (cfg.mla.kv_lora_rank
+                                + cfg.mla.qk_rope_head_dim) * 2  # cc+kc bf16
+    return per
+
+
+def _modeled_bytes_per_token(cfg, path, mean_len, max_len):
+    """Decode-attention bytes moved per emitted token under each data path.
+
+    dense  — scores run over the full (n_slots, max_len) cache: capacity.
+    gather — gather_view materializes a capacity-sized copy (pool read +
+             copy write) that the attention then reads again: 3x capacity.
+    kernel — the block table admits only backed, in-causal-range blocks:
+             the row's ACTUAL length, independent of pool capacity.
+    """
+    per = _kv_bytes_per_position(cfg)
+    return per * {"dense": max_len, "gather": 3 * max_len,
+                  "kernel": mean_len}[path]
+
+
+def _decode_path_rows(cfg, params, prompts, max_new, scheme, max_len=64):
+    """dense vs gather-view vs kernel decode rows + the BENCH_serve payload."""
+    rows, detail = [], {}
+    prompt_len = len(prompts[0])
+    mean_len = prompt_len + (max_new + 1) / 2  # average backed length
+    for path in ("dense", "gather", "kernel"):
+        econf = EngineConfig(n_slots=len(prompts), max_len=max_len,
+                             prefill_chunk=16, paged=path != "dense",
+                             prequant=True, scheme=scheme,
+                             paged_kernel=path == "kernel")
+        eng = ServeEngine(cfg, params, econf)
+        _warm_and_reset(eng, prompts[0], 2)
+        for p in prompts:
+            eng.submit(Request(prompt=p, max_new=max_new))
+        eng.run()
+        st = eng.stats
+        tps = st["decode_tokens"] / max(st["decode_s"], 1e-9)
+        bpt = _modeled_bytes_per_token(cfg, path, mean_len, max_len)
+        rows.append((f"serve/decode_{path}", 1e6 / tps,
+                     f"tok_s={tps:.1f} modeled_bytes_per_tok={bpt:.0f}"))
+        detail[path] = {
+            "tok_s": round(tps, 2),
+            "modeled_bytes_per_token": int(bpt),
+            "kv_positions_touched": (mean_len if path == "kernel"
+                                     else max_len),
+            "pool_capacity": max_len,
+            "mean_seq_len": mean_len,
+        }
+    return rows, detail
+
+
+def _emit_bench_json(decode_paths, rows, smoke):
+    """BENCH_serve.json at the repo root: the serving bench trajectory
+    artifact future PRs regress against."""
+    payload = {
+        "bench": "serve_throughput",
+        "smoke": bool(smoke),
+        "backend": jax.default_backend(),
+        "decode_paths": decode_paths,
+        "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
+                 for n, us, d in rows],
+    }
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        os.pardir, "BENCH_serve.json")
+    with open(os.path.normpath(path), "w") as f:
+        json.dump(payload, f, indent=1)
+
+
 def _spec_model(cfg, params):
     """Shape random-init params like a trained model for the spec rows:
     damp every residual output projection and tie the head to the embedding
@@ -125,10 +224,7 @@ def _spec_engine_toks(cfg, params, prompts, max_new, scheme, spec_k,
     # (shorter prompts take the token-by-token path instead), and max_new
     # spans TWO spec rounds so the draft catch-up step — which a first round
     # never needs — also compiles before measurement
-    eng.submit(Request(prompt=prompts[0], max_new=max(2 * (spec_k + 1), 3)))
-    eng.run()
-    for k in eng.stats:
-        eng.stats[k] = 0 if isinstance(eng.stats[k], int) else 0.0
+    _warm_and_reset(eng, prompts[0], max(2 * (spec_k + 1), 3))
     for p in prompts:
         eng.submit(Request(prompt=p, max_new=max_new))
     eng.run()
@@ -165,6 +261,15 @@ def run(quick: bool = True):
                  f"tok_s={pq_tps:.1f} batch={batch} "
                  f"speedup_vs_seed={pq_tps / seed_tps:.2f}x"))
 
+    # --- decode data-path comparison (dense / gather-view / Pallas kernel);
+    # runs under --smoke too, so CI exercises the kernel wrapper. max_new is
+    # capped so prompt+new stays well under the 64-position pool: the
+    # capacity/actual-length GAP is the thing the bytes model measures ------
+    dp_new = 4 if smoke else min(max_new, 24)
+    dp_rows, dp_detail = _decode_path_rows(cfg, params, prompts, dp_new,
+                                           scheme)
+    rows.extend(dp_rows)
+
     # --- self-speculative decoding (needs >= 2 layers for a prefix draft) ---
     spec_cfg = (bench_cfg(d_model=128, n_layers=2, vocab=256, d_ff=256)
                 if smoke else cfg)
@@ -194,4 +299,5 @@ def run(quick: bool = True):
         rows.append(("serve/engine_poisson", 1e6 / max(po_tps, 1e-9),
                      f"tok_s={po_tps:.1f} requests={n_req} "
                      f"slots=4 finished={st['finished']}"))
+    _emit_bench_json(dp_detail, rows, smoke)
     return rows

@@ -42,6 +42,11 @@ def main():
     ap.add_argument("--no-prequant", action="store_true")
     ap.add_argument("--dense", action="store_true",
                     help="dense per-slot caches instead of the paged pool")
+    ap.add_argument("--paged-kernel", default=None,
+                    choices=["on", "off"],
+                    help="block-table flash-decode Pallas kernel "
+                         "(default: on for TPU, off for CPU where it would "
+                         "run interpreted; 'on' forces interpret mode)")
     args = ap.parse_args()
 
     backend = jax.default_backend().upper()
@@ -71,7 +76,9 @@ def main():
     eng = ServeEngine(cfg, params, EngineConfig(
         n_slots=b, max_len=max_len, prefill_chunk=16,
         paged=not args.dense, prequant=not args.no_prequant,
-        scheme=args.scheme, spec_k=args.spec_k, draft_layers=draft_layers))
+        scheme=args.scheme, spec_k=args.spec_k, draft_layers=draft_layers,
+        paged_kernel=(None if args.paged_kernel is None
+                      else args.paged_kernel == "on")))
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k)
     ids = [eng.submit(Request(prompt=p, max_new=args.tokens, sampling=sp))
            for p in prompts]
@@ -81,7 +88,8 @@ def main():
     st = eng.stats
 
     print(f"arch={cfg.name} scheme={args.scheme} engine "
-          f"(paged={not args.dense}, prequant={not args.no_prequant})")
+          f"(paged={not args.dense}, prequant={not args.no_prequant}, "
+          f"paged_kernel={eng.paged_kernel})")
     print(f"prefill: {st['prefill_tokens']} tokens in {st['prefill_s']*1e3:.0f}ms")
     print(f"decode:  {st['decode_tokens']} tokens over {st['decode_steps']} "
           f"steps = {st['decode_tokens']/max(st['decode_s'],1e-9):.1f} tok/s "

@@ -1,3 +1,15 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# The contract applies to INFERENCE kernels too, not just the paper's
+# training-side quantizer/GEMM kernels: every kernel ships as
+#   <name>.py  — the Pallas body (grid, block specs, scratch)
+#   ops.py     — the public jit'd wrapper (static shape/flag handling;
+#                interpret=None resolves per backend: compiled on TPU,
+#                interpreted elsewhere so CPU CI always runs the body)
+#   ref.py     — a pure-jnp oracle, which for inference kernels is the
+#                exact serving reference path being replaced (e.g.
+#                paged_attention's oracle is gather_view + decode_sdpa)
+# and a parity suite under tests/ (marker: kernels) pinning kernel ==
+# oracle across the shapes the serving/training paths actually use.

@@ -2,19 +2,72 @@
 the kernel contract: <name>.py kernel + ops.py wrapper + ref.py oracle).
 
 On real TPU hardware pass interpret=False; this container validates in
-interpret mode (the kernel bodies execute in Python on CPU).
+interpret mode (the kernel bodies execute in Python on CPU). The paged
+decode kernels resolve `interpret=None` from the active backend so the
+serving engine can call them unconditionally.
 """
 
 from __future__ import annotations
 
-import jax
+import functools
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import paged_attention as PA
 from repro.kernels.fp4_matmul import fp4_matmul
 from repro.kernels.ms_eden_requant import ms_eden_requant
 from repro.kernels.nvfp4_quant import nvfp4_fos_quant
 
 __all__ = ["nvfp4_fos_quant", "ms_eden_requant", "fp4_matmul",
-           "quartet2_backward_gemm"]
+           "quartet2_backward_gemm", "paged_attention",
+           "paged_mla_attention"]
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    """Kernels compile only on TPU; anywhere else (CPU CI, the dry-run
+    host mesh) they run in interpret mode."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention(q, k_pool, v_pool, table, pos, *, window: int | None = None,
+                    interpret: bool | None = None):
+    """Flash-decode GQA attention straight off the paged KV pool.
+
+    q: (B, Sq, H, hd); k_pool: (P, BS, KV, hd); v_pool: (P, BS, KV, vd);
+    table: (B, MAXB) int32 block table (OOB sentinel == P for unallocated
+    entries); pos: (B,) absolute position of each row's first query token.
+    Equivalent to `decode_sdpa(q, gather_view(k_pool, table),
+    gather_view(v_pool, table), pos, window=window)` without ever
+    materializing the gathered views. Returns (B, Sq, H, vd) in q.dtype.
+    """
+    out = PA.paged_gqa_call(q, k_pool, v_pool, table,
+                            jnp.asarray(pos, jnp.int32), window=window,
+                            interpret=_resolve_interpret(interpret))
+    return out.astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("qk_dim", "interpret"))
+def paged_mla_attention(q_abs, q_rope, cc_pool, kc_pool, table, pos, *,
+                        qk_dim: int, interpret: bool | None = None):
+    """Absorbed-form MLA flash-decode over the shared latent pools.
+
+    q_abs: (B, Sq, H, lora) — q_nope already absorbed through W_uk;
+    q_rope: (B, Sq, H, rope); cc_pool: (P, BS, lora); kc_pool: (P, BS,
+    rope). Scores are (q_abs·cc + q_rope·kc) / sqrt(qk_dim) and the value
+    readout is over cc itself, so the fp32 result is o_lat (B, Sq, H, lora)
+    for the caller's W_uv absorption (vd != hd: the whole point of MLA).
+    """
+    # the f32 image of mla_decode's 1/sqrt(nope+rope), so kernel and
+    # reference multiply by the identical scalar
+    scale = float(np.float32(1.0) / np.sqrt(np.float32(qk_dim)))
+    return PA.paged_mla_call(q_abs, q_rope, cc_pool, kc_pool, table,
+                             jnp.asarray(pos, jnp.int32), scale=scale,
+                             interpret=_resolve_interpret(interpret))
 
 
 def quartet2_backward_gemm(a, b, rht_key, sr_key_a, sr_key_b, *,

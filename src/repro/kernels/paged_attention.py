@@ -1,0 +1,252 @@
+"""Pallas TPU kernel: block-table flash-decode over the paged KV pool.
+
+The serving hot path used to materialize `serve.kv_pool.gather_view` — a
+dense (B, MAXB*BS, ...) copy of each layer's pool — and then score against
+the FULL table capacity every step. This kernel consumes the pool-shaped
+leaves directly:
+
+  - the (B, MAXB) block table and the (B,) position vector are
+    SCALAR-PREFETCHED; each grid cell's BlockSpec index map resolves
+    `table[b, j]` on the fly, so the pipeline DMAs exactly one physical
+    pool block per (row, logical-block) cell and no gathered view ever
+    exists in HBM;
+  - the grid is (batch row, logical KV block) with the block axis
+    innermost; a per-row online-softmax accumulator (m, l, acc) lives in
+    VMEM scratch across the block sweep (flash-decode);
+  - blocks that cannot contribute are SKIPPED, not masked after the fact:
+    OOB-sentinel table entries (unallocated / inactive rows), blocks
+    entirely beyond the row's newest query position (causal), and — for
+    sliding-window `lattn` layers — blocks entirely older than the OLDEST
+    query's window. Skipped cells clamp their index map to the last pool
+    block and predicate out the compute, so the fetch is a buffer revisit,
+    not extra traffic;
+  - per-key masking inside a live block comes from absolute positions
+    (key block j covers positions [j*BS, (j+1)*BS)), matching
+    `models.attention.decode_sdpa`'s `kj <= qpos` / window rules exactly.
+
+Two variants share the online-softmax update:
+
+  gqa  — q (B, Sq, H, hd) vs K/V pools (P, BS, KV, hd)/(P, BS, KV, vd);
+         grouped heads (rep = H // KV) broadcast over each KV head.
+  mla  — absorbed-form latent decode: q_abs (B, Sq, H, lora) and
+         q_rope (B, Sq, H, rope) vs the SHARED cc (P, BS, lora) /
+         kc (P, BS, rope) pools; the score is q_abs·cc + q_rope·kc and
+         the value readout is over cc itself (vd == lora != hd), so the
+         kernel returns o_lat for the caller's w_uv absorption.
+
+Sq >= 1 supports the engine's (n_slots, spec_k+1) speculative verify
+chunks; query s of row b sits at absolute position pos[b] + s. Outputs are
+fp32; callers cast. Fully-masked rows (inactive slots: all-sentinel table)
+produce exact zeros (l == 0 guard), mirroring the reference path's
+gathered-zeros result.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # matches models.attention.NEG_INF
+
+
+def _positions(p0, sq: int, bs: int, j):
+    """(Sq, BS) absolute key/query position grids for grid cell (row, j)."""
+    kj = j * bs + jax.lax.broadcasted_iota(jnp.int32, (sq, bs), 1)
+    qpos = p0 + jax.lax.broadcasted_iota(jnp.int32, (sq, bs), 0)
+    return kj, qpos
+
+
+def _online_update(s, ok, m_ref, l_ref, acc_ref, vals):
+    """One flash step: fold masked scores `s` (..., Sq-ish, BS) and the block
+    values into the running (m, l, acc) scratch. `vals` maps probabilities
+    (..., BS) -> the block's value contribution, so the two variants share
+    the numerics (exp of masked lanes is forced to exactly 0, and a block
+    that changes nothing multiplies the accumulators by exactly 1.0)."""
+    s = jnp.where(ok, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(ok, jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + vals(p)
+    m_ref[...] = m_new
+
+
+def _gqa_kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                m_ref, l_ref, acc_ref, *, bs: int, sentinel: int,
+                window: int | None, sqrt_hd: float):
+    b, j = pl.program_id(0), pl.program_id(1)
+    sq, h = q_ref.shape[1], q_ref.shape[2]
+    kv, hd = k_ref.shape[2], k_ref.shape[3]
+    rep, vd = h // kv, v_ref.shape[3]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    p0 = pos_ref[b]
+    pmax = p0 + sq - 1                      # newest query position in the row
+    live = (table_ref[b, j] < sentinel) & (j * bs <= pmax)
+    if window is not None:
+        # skip blocks whose newest key predates even the OLDEST query's
+        # window (older queries admit older keys, so p0 — not pmax — is
+        # the skip horizon; partial overlap is masked per key below)
+        live &= (j + 1) * bs - 1 > p0 - window
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)    # (Sq, H, hd)
+        k = k_ref[0].astype(jnp.float32)    # (BS, KV, hd)
+        v = v_ref[0].astype(jnp.float32)    # (BS, KV, vd)
+        # grouped scores: (KV, Sq*rep, hd) x (KV, hd, BS) -> (KV, Sq*rep, BS)
+        qg = q.reshape(sq, kv, rep, hd).transpose(1, 0, 2, 3)
+        qg = qg.reshape(kv, sq * rep, hd)
+        s = jax.lax.dot_general(
+            qg, k.transpose(1, 2, 0), (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) / sqrt_hd
+        s = s.reshape(kv, sq, rep, bs)
+        kj, qpos = _positions(p0, sq, bs, j)
+        ok = kj <= qpos
+        if window is not None:
+            ok &= kj > qpos - window
+        ok = ok[None, :, None, :]           # (1, Sq, 1, BS)
+
+        def vals(p):                        # (KV, Sq, rep, BS) -> value sum
+            pv = jax.lax.dot_general(
+                p.reshape(kv, sq * rep, bs), v.transpose(1, 0, 2),
+                (((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32)
+            return pv.reshape(kv, sq, rep, vd)
+
+        _online_update(s, ok, m_ref, l_ref, acc_ref, vals)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _final():
+        o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0] = o.transpose(1, 0, 2, 3).reshape(sq, h, vd)
+
+
+def _mla_kernel(table_ref, pos_ref, qa_ref, qr_ref, cc_ref, kc_ref, o_ref,
+                m_ref, l_ref, acc_ref, *, bs: int, sentinel: int,
+                scale: float):
+    b, j = pl.program_id(0), pl.program_id(1)
+    sq, h, lora = qa_ref.shape[1], qa_ref.shape[2], qa_ref.shape[3]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    p0 = pos_ref[b]
+    live = (table_ref[b, j] < sentinel) & (j * bs <= p0 + sq - 1)
+
+    @pl.when(live)
+    def _block():
+        qa = qa_ref[0].astype(jnp.float32).reshape(sq * h, lora)
+        qr = qr_ref[0].astype(jnp.float32).reshape(sq * h, -1)
+        cc = cc_ref[0].astype(jnp.float32)  # (BS, lora)
+        kc = kc_ref[0].astype(jnp.float32)  # (BS, rope)
+        s = (jnp.dot(qa, cc.T, preferred_element_type=jnp.float32)
+             + jnp.dot(qr, kc.T, preferred_element_type=jnp.float32)) * scale
+        s = s.reshape(sq, h, bs)
+        kj, qpos = _positions(p0, sq, bs, j)
+        ok = (kj <= qpos)[:, None, :]       # (Sq, 1, BS)
+
+        def vals(p):                        # (Sq, H, BS) -> latent readout
+            return jnp.dot(p.reshape(sq * h, bs), cc,
+                           preferred_element_type=jnp.float32
+                           ).reshape(sq, h, lora)
+
+        _online_update(s, ok, m_ref, l_ref, acc_ref, vals)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _final():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+
+
+def _table_spec_index(sentinel):
+    """Index map resolving the physical pool block from the prefetched table
+    (the whole point: the pipeline fetches `table[b, j]`, never a view).
+    Sentinel entries clamp to the LAST pool block (sentinel - 1) — the
+    cell's compute is predicated off, so the clamped fetch is a buffer
+    revisit, not extra traffic."""
+    def index(b, j, table_ref, pos_ref):
+        return (jnp.minimum(table_ref[b, j], sentinel - 1), 0, 0, 0)
+    return index
+
+
+def paged_gqa_call(q, k_pool, v_pool, table, pos, *, window: int | None,
+                   interpret: bool):
+    b, sq, h, hd = q.shape
+    n_blocks, bs, kv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    vd = v_pool.shape[3]
+    maxb = table.shape[1]
+    rep = h // kv
+    sqrt_hd = float(np.sqrt(np.float32(hd)))  # matches decode_sdpa's divisor
+    idx = _table_spec_index(n_blocks)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, maxb),
+        in_specs=[
+            pl.BlockSpec((1, sq, h, hd), lambda i, j, t, p: (i, 0, 0, 0)),
+            pl.BlockSpec((1, bs, kv, hd), idx),
+            pl.BlockSpec((1, bs, kv, vd), idx),
+        ],
+        out_specs=pl.BlockSpec((1, sq, h, vd), lambda i, j, t, p: (i, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kv, sq, rep), jnp.float32),
+            pltpu.VMEM((kv, sq, rep), jnp.float32),
+            pltpu.VMEM((kv, sq, rep, vd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_gqa_kernel, bs=bs, sentinel=n_blocks,
+                          window=window, sqrt_hd=sqrt_hd),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, vd), jnp.float32),
+        interpret=interpret,
+    )(table, pos, q, k_pool, v_pool)
+
+
+def paged_mla_call(q_abs, q_rope, cc_pool, kc_pool, table, pos, *,
+                   scale: float, interpret: bool):
+    b, sq, h, lora = q_abs.shape
+    rope = q_rope.shape[3]
+    n_blocks, bs = cc_pool.shape[0], cc_pool.shape[1]
+    maxb = table.shape[1]
+    idx = _table_spec_index(n_blocks)
+
+    def pool_idx3(i, j, t, p):
+        return idx(i, j, t, p)[:3]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, maxb),
+        in_specs=[
+            pl.BlockSpec((1, sq, h, lora), lambda i, j, t, p: (i, 0, 0, 0)),
+            pl.BlockSpec((1, sq, h, rope), lambda i, j, t, p: (i, 0, 0, 0)),
+            pl.BlockSpec((1, bs, lora), pool_idx3),
+            pl.BlockSpec((1, bs, rope), pool_idx3),
+        ],
+        out_specs=pl.BlockSpec((1, sq, h, lora),
+                               lambda i, j, t, p: (i, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((sq, h), jnp.float32),
+            pltpu.VMEM((sq, h), jnp.float32),
+            pltpu.VMEM((sq, h, lora), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_mla_kernel, bs=bs, sentinel=n_blocks, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, lora), jnp.float32),
+        interpret=interpret,
+    )(table, pos, q_abs, q_rope, cc_pool, kc_pool)

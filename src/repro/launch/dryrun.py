@@ -36,7 +36,7 @@ from repro.launch import hlo_cost
 from repro.launch import specs as SPECS
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm
-from repro.serve.decode import make_prefill_step, make_serve_step
+from repro.serve.decode import make_paged_serve_step, make_prefill_step
 from repro.train.train_step import make_train_step
 
 # TPU v5e roofline constants (per chip)
@@ -128,22 +128,35 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, scheme: str,
             jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, b_sh),
                              out_shardings=(None, c_sh))
             lowered = jitted.lower(params_s, cache_s, batch_s)
-        else:  # decode
-            fn = make_serve_step(cfg, scheme)
-            tok_s, cache_s = SPECS.decode_specs(cfg, shape)
+        else:  # decode — the engine's paged step (pos vector + block table),
+            # so the cost model prices the pool gather/scatter traffic the
+            # serving hot path actually moves (not the legacy dense cache).
+            # NOTE the collective term it surfaces is real and damning: the
+            # generic cache sharding puts the pool's BLOCK axis on "data",
+            # and with a replicated block table XLA cannot prove any row's
+            # blocks are device-local, so the gather all-gathers the pool
+            # every step. That priced pain is the case for the ROADMAP
+            # multi-host item (slot-affine pool sharding, per-slot host
+            # tables) — and for the paged_attention kernel, which replaces
+            # the gather wholesale on-device.
+            fn = make_paged_serve_step(cfg, scheme)
+            in_s, cache_s = SPECS.paged_decode_specs(cfg, shape)
             p_sh = SH.state_shardings(params_s, mesh, fsdp=fsdp)
             c_sh = SH.cache_shardings(cache_s, mesh)
-            t_sh = SH.input_shardings({"t": tok_s}, mesh)["t"]
-            jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, t_sh, None),
-                             out_shardings=(None, c_sh))
-            lowered = jitted.lower(params_s, cache_s, tok_s,
-                                   jax.ShapeDtypeStruct((), jnp.int32))
+            i_sh = SH.input_shardings(in_s, mesh)
+            jitted = jax.jit(fn, in_shardings=(
+                p_sh, c_sh, i_sh["table"], i_sh["tokens"], i_sh["pos"],
+                i_sh["active"]), out_shardings=(None, c_sh))
+            lowered = jitted.lower(params_s, cache_s, in_s["table"],
+                                   in_s["tokens"], in_s["pos"], in_s["active"])
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # some jax versions: one dict/program
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     # trip-count-aware cost model (XLA's cost_analysis counts scan bodies
     # once; hlo_cost multiplies by while trip counts) — see hlo_cost.py

@@ -43,11 +43,36 @@ def prefill_specs(cfg: ArchConfig, shape: str):
     return batch, cache_specs(cfg, b, s)
 
 
-def decode_specs(cfg: ArchConfig, shape: str):
+PAGED_BLOCK = 16  # dry-run pool block size (matches EngineConfig default)
+
+
+def paged_decode_specs(cfg: ArchConfig, shape: str, *,
+                       block_size: int = PAGED_BLOCK):
+    """Input stand-ins for the ENGINE's paged decode step — per-slot position
+    vector, active mask, (n_slots, max_blocks) block table, and pool-shaped
+    cache leaves — so dry-run decode cells price the block-table
+    gather/scatter traffic the serving hot path actually moves.
+
+    Pure-lattn stacks size the pool at O(window) blocks per slot (the
+    sliding-window reclamation bound in serve/kv_pool.py), which is exactly
+    why long_500k decode state stays sublinear for the hybrid archs."""
+    from repro.serve import kv_pool as KV
     cell = SHAPES[shape]
     b, s = cell.global_batch, cell.seq_len
-    tokens = SDS((b, 1), jnp.int32)
-    return tokens, cache_specs(cfg, b, s)
+    max_blocks = -(-s // block_size)
+    window = KV.reclaim_window(cfg)
+    blocks_per_slot = (max_blocks if window is None
+                       else min(max_blocks, -(-window // block_size) + 1))
+    n_blocks = b * blocks_per_slot
+    cache = jax.eval_shape(
+        lambda: KV.init_cache(cfg, b, s, paged=True, n_blocks=n_blocks,
+                              block_size=block_size))
+    return {
+        "tokens": SDS((b, 1), jnp.int32),
+        "pos": SDS((b,), jnp.int32),
+        "active": SDS((b,), jnp.bool_),
+        "table": SDS((b, max_blocks), jnp.int32),
+    }, cache
 
 
 def param_specs(cfg: ArchConfig):

@@ -233,7 +233,7 @@ def gqa_apply(p, x, cfg, scheme, seed, layer, *, causal=True, window=None,
 
 
 def gqa_decode(p, x, cfg, scheme, seed, layer, cache_kv, pos, *, window=None,
-               active=None, block_table=None):
+               active=None, block_table=None, paged_kernel=False):
     """Cached decode / chunked-prefill step. x: (B, Sq, D) with Sq >= 1.
 
     pos: scalar or (B,) — absolute position of each row's first token
@@ -244,6 +244,9 @@ def gqa_decode(p, x, cfg, scheme, seed, layer, cache_kv, pos, *, window=None,
     block_table: (B, MAXB) int32 — when given, cache_kv holds POOL-shaped
       (P, BS, KV, hd) leaves and reads/writes go through the paged KV pool
       (serve/kv_pool.py); unallocated entries carry the pool's OOB sentinel.
+    paged_kernel: attend with the block-table flash-decode Pallas kernel
+      (kernels/paged_attention.py) instead of materializing gather_view
+      copies — O(row length) HBM traffic instead of O(table capacity).
     """
     b, sq = x.shape[:2]
     posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
@@ -257,8 +260,14 @@ def gqa_decode(p, x, cfg, scheme, seed, layer, cache_kv, pos, *, window=None,
         from repro.serve import kv_pool as KV
         kc = KV.scatter_tokens(kc, block_table, positions, k, valid)
         vc = KV.scatter_tokens(vc, block_table, positions, v, valid)
-        o = decode_sdpa(q, KV.gather_view(kc, block_table),
-                        KV.gather_view(vc, block_table), posb, window=window)
+        if paged_kernel:
+            from repro.kernels import ops as KOPS
+            o = KOPS.paged_attention(q, kc, vc, block_table, posb,
+                                     window=window)
+        else:
+            o = decode_sdpa(q, KV.gather_view(kc, block_table),
+                            KV.gather_view(vc, block_table), posb,
+                            window=window)
     else:
         cap = kc.shape[1]
         ring = window is not None and cap == window

@@ -183,7 +183,7 @@ def _merge_state(active, new, old):
 
 def _apply_layer(spec, p, x, cfg, scheme, seed, layer_id, *, mode,
                  cache=None, pos=None, positions=None, enc_out=None,
-                 active=None, block_table=None):
+                 active=None, block_table=None, paged_kernel=False):
     """One (mixer, ff) layer. Returns (x, new_cache_entry, aux)."""
     mixer, ff = spec
     window = cfg.griffin.window if (cfg.griffin and mixer == "lattn") else None
@@ -194,7 +194,8 @@ def _apply_layer(spec, p, x, cfg, scheme, seed, layer_id, *, mode,
         if mode == "decode":
             o, new_kv = A.gqa_decode(p["mix"], h, cfg, scheme, seed, layer_id,
                                      cache["kv"], pos, window=window,
-                                     active=active, block_table=block_table)
+                                     active=active, block_table=block_table,
+                                     paged_kernel=paged_kernel)
             cache = {**cache, "kv": new_kv}
         else:
             o, kv = A.gqa_apply(p["mix"], h, cfg, scheme, seed, layer_id,
@@ -206,7 +207,8 @@ def _apply_layer(spec, p, x, cfg, scheme, seed, layer_id, *, mode,
         if mode == "decode":
             o, new_c = M.mla_decode(p["mix"], h, cfg, scheme, seed, layer_id,
                                     cache["mla"], pos, active=active,
-                                    block_table=block_table)
+                                    block_table=block_table,
+                                    paged_kernel=paged_kernel)
             cache = {**cache, "mla": new_c}
         else:
             o, ckr = M.mla_apply(p["mix"], h, cfg, scheme, seed, layer_id,
@@ -368,7 +370,8 @@ REMAT = False
 
 def _run_stages(params, x, cfg, scheme, seed, *, mode, caches=None,
                 pos=None, positions=None, enc_out=None, stages=None,
-                layer_offset=0, active=None, block_table=None):
+                layer_offset=0, active=None, block_table=None,
+                paged_kernel=False):
     specs = stages if stages is not None else layer_specs(cfg)
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = []
@@ -387,7 +390,8 @@ def _run_stages(params, x, cfg, scheme, seed, *, mode, caches=None,
                 x, c_out, a = _apply_layer(
                     spec, layer_p[f"l{li}"], x, cfg, scheme, seed, lid,
                     mode=mode, cache=c_in, pos=pos, positions=positions,
-                    enc_out=enc_out, active=active, block_table=block_table)
+                    enc_out=enc_out, active=active, block_table=block_table,
+                    paged_kernel=paged_kernel)
                 if new_c is not None:
                     new_c[f"l{li}"] = c_out
                 aux = aux + a
@@ -416,7 +420,7 @@ def head_weight(params, cfg):
 
 def forward(params, cfg: ArchConfig, inputs, scheme: str, seed: jax.Array,
             *, caches=None, mode: str = "train", pos=None, head: bool = True,
-            active=None, block_table=None):
+            active=None, block_table=None, paged_kernel=False):
     """Full model. inputs: {"tokens": (B,S)} or {"embeds": (B,S,D)} (+ both
     for enc-dec). Returns (logits_or_hidden, new_caches, aux_loss); with
     head=False the final normed hidden states are returned (lm_loss fuses the
@@ -426,7 +430,9 @@ def forward(params, cfg: ArchConfig, inputs, scheme: str, seed: jax.Array,
     legacy) or a per-sequence (B,) vector; S >= 1 tokens are consumed per row
     (S > 1 = chunked prefill into the cache). `active` (B,) gates cache
     writes per row; `block_table` (B, MAXB) switches kv/mla cache leaves to
-    the paged pool layout (see serve/kv_pool.py)."""
+    the paged pool layout (see serve/kv_pool.py); `paged_kernel` attends
+    through the block-table flash-decode Pallas kernel instead of gathered
+    views (kernels/paged_attention.py — requires block_table)."""
     if cfg.enc_dec:
         return _encdec_forward(params, cfg, inputs, scheme, seed,
                                caches=caches, mode=mode, pos=pos, head=head)
@@ -442,7 +448,8 @@ def forward(params, cfg: ArchConfig, inputs, scheme: str, seed: jax.Array,
         positions = jnp.arange(s)[None, :]
     x, caches, aux = _run_stages(params, x, cfg, scheme, seed, mode=mode,
                                  caches=caches, pos=pos, positions=positions,
-                                 active=active, block_table=block_table)
+                                 active=active, block_table=block_table,
+                                 paged_kernel=paged_kernel)
     x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
     if not head:
         return x, caches, aux
@@ -453,7 +460,7 @@ def forward(params, cfg: ArchConfig, inputs, scheme: str, seed: jax.Array,
 def forward_prefix(params, cfg: ArchConfig, inputs, scheme: str,
                    seed: jax.Array, *, n_prefix: int, caches=None,
                    mode: str = "decode", pos=None, active=None,
-                   block_table=None):
+                   block_table=None, paged_kernel=False):
     """Early-exit forward: the first `n_prefix` layers + final norm + head.
 
     This is the self-speculative DRAFT stack (serve/spec_decode.py): it
@@ -476,7 +483,8 @@ def forward_prefix(params, cfg: ArchConfig, inputs, scheme: str,
     x, new_caches, aux = _run_stages(sub, x, cfg, scheme, seed, mode=mode,
                                      caches=caches, pos=pos,
                                      positions=positions, stages=specs,
-                                     active=active, block_table=block_table)
+                                     active=active, block_table=block_table,
+                                     paged_kernel=paged_kernel)
     x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
     logits = lm_head(x, head_weight(params, cfg), cfg.quantize_lm_head,
                      scheme, seed)

@@ -74,12 +74,14 @@ def mla_apply(p, x, cfg, scheme, seed, layer, *, positions=None):
 
 
 def mla_decode(p, x, cfg, scheme, seed, layer, cache, pos, *, active=None,
-               block_table=None):
+               block_table=None, paged_kernel=False):
     """Absorbed-form decode over the latent cache. x: (B, Sq, D), Sq >= 1
     (Sq > 1 = chunked prefill).
 
     cache = (c: (B,Smax,kv_lora), kr: (B,Smax,rope)) — or pool-shaped
-    (P,BS,dim) leaves addressed through `block_table` (serve/kv_pool.py).
+    (P,BS,dim) leaves addressed through `block_table` (serve/kv_pool.py);
+    with `paged_kernel` the score/readout runs in the block-table
+    flash-decode Pallas kernel instead of over gather_view copies.
     pos: scalar or (B,) first-token position; active: (B,) write gate.
     score_h(t) = q_nope_h^T Wuk_h c_t + q_rope_h^T kr_t   (Wuk absorbed into q)
     out_h = (sum_t p_t c_t)^T Wuv_h                        (Wuv absorbed after)
@@ -99,12 +101,26 @@ def mla_decode(p, x, cfg, scheme, seed, layer, cache, pos, *, active=None,
     valid = positions >= 0
     if active is not None:
         valid &= active[:, None]
+
+    wkv_b = p["wkv_b"].reshape(h, m.qk_nope_head_dim + m.v_head_dim, m.kv_lora_rank)
+    w_uk = wkv_b[:, : m.qk_nope_head_dim, :]     # (H, nope, lora)
+    w_uv = wkv_b[:, m.qk_nope_head_dim:, :]      # (H, v, lora)
+    q_abs = jnp.einsum("bqhn,hnl->bqhl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))              # (B,Sq,H,lora)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+
     if block_table is not None:
         from repro.serve import kv_pool as KV
         cc = KV.scatter_tokens(cc, block_table, positions, c_new, valid)
         kc = KV.scatter_tokens(kc, block_table, positions, kr2, valid)
-        cv = KV.gather_view(cc, block_table)
-        kv = KV.gather_view(kc, block_table)
+        if paged_kernel:
+            from repro.kernels import ops as KOPS
+            o_lat = KOPS.paged_mla_attention(q_abs, q_rope, cc, kc,
+                                             block_table, posb, qk_dim=qk_dim)
+            cv = None
+        else:
+            cv = KV.gather_view(cc, block_table)
+            kv = KV.gather_view(kc, block_table)
     else:
         idx = jnp.where(valid, positions, cc.shape[1])  # OOB => write dropped
         bi = jnp.arange(b)[:, None]
@@ -112,22 +128,17 @@ def mla_decode(p, x, cfg, scheme, seed, layer, cache, pos, *, active=None,
         kc = kc.at[bi, idx].set(kr2.astype(kc.dtype), mode="drop")
         cv, kv = cc, kc
 
-    wkv_b = p["wkv_b"].reshape(h, m.qk_nope_head_dim + m.v_head_dim, m.kv_lora_rank)
-    w_uk = wkv_b[:, : m.qk_nope_head_dim, :]     # (H, nope, lora)
-    w_uv = wkv_b[:, m.qk_nope_head_dim:, :]      # (H, v, lora)
-
-    q_abs = jnp.einsum("bqhn,hnl->bqhl", q_nope.astype(jnp.float32),
-                       w_uk.astype(jnp.float32))              # (B,Sq,H,lora)
-    s_lat = jnp.einsum("bqhl,btl->bhqt", q_abs, cv.astype(jnp.float32))
-    s_rope = jnp.einsum("bqhr,btr->bhqt", q_rope.astype(jnp.float32),
-                        kv.astype(jnp.float32))
-    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
-    s = (s_lat + s_rope) * scale
-    tmask = (jnp.arange(cv.shape[1], dtype=jnp.int32)[None, None, :]
-             <= positions[:, :, None])                        # (B,Sq,T)
-    s = jnp.where(tmask[:, None], s, NEG_INF)
-    prob = jax.nn.softmax(s, axis=-1)
-    o_lat = jnp.einsum("bhqt,btl->bqhl", prob, cv.astype(jnp.float32))
+    if cv is not None:  # gathered-view / dense reference arithmetic
+        s_lat = jnp.einsum("bqhl,btl->bhqt", q_abs, cv.astype(jnp.float32))
+        s_rope = jnp.einsum("bqhr,btr->bhqt", q_rope.astype(jnp.float32),
+                            kv.astype(jnp.float32))
+        scale = 1.0 / jnp.sqrt(qk_dim)
+        s = (s_lat + s_rope) * scale
+        tmask = (jnp.arange(cv.shape[1], dtype=jnp.int32)[None, None, :]
+                 <= positions[:, :, None])                    # (B,Sq,T)
+        s = jnp.where(tmask[:, None], s, NEG_INF)
+        prob = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhqt,btl->bqhl", prob, cv.astype(jnp.float32))
     o = jnp.einsum("bqhl,hvl->bqhv", o_lat, w_uv.astype(jnp.float32))
     if active is not None:
         # see gqa_decode: inactive rows must not read (layout-dependent)

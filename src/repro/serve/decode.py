@@ -40,6 +40,24 @@ def make_serve_step(cfg, scheme: str):
     return serve_step
 
 
+def make_paged_serve_step(cfg, scheme: str, *, paged_kernel: bool = False):
+    """The ENGINE's decode step signature (per-slot position vector, active
+    mask, block table, pool-shaped caches) — what launch/dryrun lowers for
+    decode cells so the cost model prices the paged gather/scatter traffic
+    instead of the legacy dense `serve_step`. `paged_kernel` switches the
+    attention to the block-table flash-decode kernel (left off for cost
+    analysis: the reference path's gather traffic is the thing being
+    priced, and Pallas calls are opaque to the HLO cost model)."""
+    def paged_serve_step(params, cache, table, tokens, pos, active):
+        logits, cache, _ = lm.forward(params, cfg, {"tokens": tokens}, scheme,
+                                      jnp.asarray(_SEED), caches=cache,
+                                      mode="decode", pos=pos, active=active,
+                                      block_table=table,
+                                      paged_kernel=paged_kernel)
+        return logits, cache
+    return paged_serve_step
+
+
 def greedy_generate(params, cfg, scheme, prompt_tokens, max_new: int,
                     max_len: int | None = None, prompt_lens=None):
     """Simple host-side generation loop (examples / tests / baseline).

@@ -83,6 +83,18 @@ class EngineConfig:
     # per round with the first draft_layers blocks, verify in one chunk
     spec_k: int = 0               # 0 disables speculation
     draft_layers: int = 0         # truncated-stack draft depth
+    # block-table flash-decode kernel (kernels/paged_attention.py): None
+    # resolves per backend — the Pallas kernel on TPU (the body is
+    # pltpu-specific), the gather_view reference path everywhere else
+    # (where the kernel would only ever run interpreted). Explicit True
+    # forces the kernel (interpret mode off-TPU — how the parity tests
+    # drive it); requires paged=True.
+    paged_kernel: bool | None = None
+
+    def resolved_paged_kernel(self) -> bool:
+        if self.paged_kernel is None:
+            return self.paged and jax.default_backend() == "tpu"
+        return self.paged_kernel
 
 
 @dataclass
@@ -106,6 +118,11 @@ class ServeEngine:
         e = self.econf
         self.params = (prequantize(params, cfg, e.scheme) if e.prequant
                        else params)
+        self.paged_kernel = e.resolved_paged_kernel()
+        if self.paged_kernel and not e.paged:
+            raise ValueError("paged_kernel=True requires paged=True (the "
+                             "kernel consumes pool-shaped leaves + a block "
+                             "table; dense caches have neither)")
         self.pool = KVPool(cfg, e.n_slots, e.max_len, paged=e.paged,
                            block_size=e.block_size, n_blocks=e.n_blocks)
         if e.spec_k > 0:
@@ -125,6 +142,11 @@ class ServeEngine:
         # a verify chunk writes up to spec_k positions past a sequence's
         # final token; admission reserves that overshoot margin up front
         self._margin = e.spec_k
+        # largest per-ensure growth any engine path performs (prefill chunk,
+        # spec verify chunk, single decode token) — lets window-reclaimed
+        # pools admit sequences against their LIVE-block bound instead of
+        # blocks_for(total), so long lattn requests fit O(window) pools
+        self._max_growth = max(e.prefill_chunk, e.spec_k + 1)
         self.slots = [_Slot() for _ in range(e.n_slots)]
         self.queue: deque[Request] = deque()
         self._ids = itertools.count()
@@ -157,15 +179,15 @@ class ServeEngine:
                 "need the rejection-sampling hook "
                 "(serve.sampling.speculative_resample)")
         total = len(request.prompt) + request.max_new + self._margin
-        if not self.pool.can_ever_admit(total):
+        if not self.pool.can_ever_admit(total, self._max_growth):
             # reject now: an unservable request would head-of-line block the
             # FIFO forever (can_admit never becomes true)
             self.stats["rejected"] += 1
             raise ValueError(
                 f"request needs {total} positions "
-                f"({self.pool.blocks_for(total)} blocks) but the pool serves "
-                f"at most max_len={self.econf.max_len} / "
-                f"{self.pool.n_blocks} blocks")
+                f"({self.pool.max_live_blocks(total, self._max_growth)} live "
+                f"blocks) but the pool serves at most "
+                f"max_len={self.econf.max_len} / {self.pool.n_blocks} blocks")
         request.req_id = next(self._ids)
         self.queue.append(request)
         return request.req_id
@@ -204,16 +226,17 @@ class ServeEngine:
                 continue
             req = self.queue[0]
             total = len(req.prompt) + req.max_new + self._margin
-            if not self.pool.can_admit(total) or (
+            if not self.pool.can_admit(total, self._max_growth) or (
                     self.draft is not None
-                    and not self.draft.pool.can_admit(total)):
+                    and not self.draft.pool.can_admit(total,
+                                                      self._max_growth)):
                 break  # FIFO: don't starve the head request
             self.queue.popleft()
             self.pool.reset_slot(i)
-            self.pool.commit(i, total)
+            self.pool.commit(i, total, self._max_growth)
             if self.draft is not None:
                 self.draft.pool.reset_slot(i)
-                self.draft.pool.commit(i, total)
+                self.draft.pool.commit(i, total, self._max_growth)
             self.slots[i] = _Slot(state=PREFILL, req=req)
             self.stats["admitted"] += 1
 
@@ -317,12 +340,13 @@ class ServeEngine:
         fn = self._step_fns.get(size)
         if fn is None:
             cfg, scheme = self.cfg, self.econf.scheme
+            pk = self.paged_kernel
 
             def step_fn(params, caches, table, tokens, pos, active):
                 logits, caches, _ = lm.forward(
                     params, cfg, {"tokens": tokens}, scheme, _SEED,
                     caches=caches, mode="decode", pos=pos, active=active,
-                    block_table=table)
+                    block_table=table, paged_kernel=pk)
                 return logits, caches
 
             # donate the cache pytree: the pool is the dominant serving

@@ -41,6 +41,24 @@ from repro.models import lm
 
 TOKEN_KINDS = ("kv", "mla")
 STATE_KINDS = ("wkv", "tm_prev", "cm_prev", "lru")
+_TOKEN_MIXERS = ("gqa", "lattn", "mla")
+
+
+def reclaim_window(cfg: ArchConfig, specs=None) -> int | None:
+    """Sliding window W when EVERY token-cache layer in `specs` is `lattn`.
+
+    One block table serves every layer, so a block may only return to the
+    free list mid-sequence when NO layer can ever read it again — true
+    exactly when all token-cache mixers share the same sliding window
+    (recurrent kinds keep O(1) slot state and own no blocks). Mixed stacks
+    (any full-attention gqa/mla layer) return None: those layers attend the
+    whole prefix forever."""
+    specs = specs if specs is not None else lm.layer_specs(cfg)
+    mixers = {m for pattern, _ in specs for m, _ in pattern
+              if m in _TOKEN_MIXERS}
+    if mixers == {"lattn"} and cfg.griffin is not None:
+        return cfg.griffin.window
+    return None
 
 
 # --------------------------------------------------------------------------
@@ -166,6 +184,12 @@ class KVPool:
     bound slot, ensure/truncate outside a binding — raises SlotError rather
     than silently corrupting the free-list accounting. Token blocks are
     never zeroed: stale values sit behind the position mask.
+
+    Pure sliding-window stacks (`reclaim_window`) additionally free blocks
+    mid-sequence once they fall out of every future query's window (`ensure`
+    runs `_reclaim` before growing), keeping live blocks O(window) per slot;
+    a truncate below the reclaim floor raises SlotError because the rolled-
+    back window would need keys that no longer exist.
     """
 
     def __init__(self, cfg: ArchConfig, n_slots: int, max_len: int, *,
@@ -198,6 +222,14 @@ class KVPool:
         self._bound = [False] * n_slots  # slot currently holds a sequence
         self._lengths = [0] * n_slots    # logical tokens backed per slot
         self._table_dev = None
+        # sliding-window reclamation (pure-lattn stacks, paged mode only):
+        # blocks whose newest key predates every future query's window go
+        # back to the free list mid-sequence, so live blocks per slot stay
+        # O(window) instead of O(sequence length)
+        self.window = reclaim_window(cfg, self.specs) if paged else None
+        self._alloc_upto = [0] * n_slots   # logical blocks ever allocated
+        self._live_from = [0] * n_slots    # first logical block still owned
+        self._floor = [0] * n_slots        # min sound truncate target
 
     # ---- block accounting ----
 
@@ -208,13 +240,32 @@ class KVPool:
     def blocks_for(self, n_tokens: int) -> int:
         return math.ceil(n_tokens / self.block_size)
 
-    def can_ever_admit(self, total_tokens: int) -> bool:
+    def max_live_blocks(self, total_tokens: int,
+                        max_growth: int | None = None) -> int:
+        """Most blocks a sequence of total_tokens can own SIMULTANEOUSLY.
+
+        Without a reclaim window this is just blocks_for(total). With one,
+        `ensure` reclaims before every growth step, so — provided no single
+        ensure grows a slot by more than `max_growth` tokens — a slot spans
+        at most window + one growth chunk of live positions (plus block-
+        granularity slack at both ends). This is what makes long sequences
+        admissible to pools far smaller than blocks_for(total): the whole
+        point of mid-sequence reclamation."""
+        need = self.blocks_for(total_tokens)
+        if self.window is None or max_growth is None:
+            return need
+        return min(need, self.blocks_for(self.window + max_growth) + 2)
+
+    def can_ever_admit(self, total_tokens: int,
+                       max_growth: int | None = None) -> bool:
         """Is a sequence of total_tokens servable by this pool at all?"""
         if total_tokens > self.max_len:
             return False
-        return (not self.paged) or self.blocks_for(total_tokens) <= self.n_blocks
+        return (not self.paged) or (
+            self.max_live_blocks(total_tokens, max_growth) <= self.n_blocks)
 
-    def can_admit(self, total_tokens: int) -> bool:
+    def can_admit(self, total_tokens: int,
+                  max_growth: int | None = None) -> bool:
         """Admission check: can a sequence of total_tokens be fully served
         alongside every already-admitted sequence?
 
@@ -229,17 +280,22 @@ class KVPool:
         outstanding = sum(c - len(o)
                           for c, o in zip(self._committed, self._owned))
         return (self.free_block_count - outstanding
-                >= self.blocks_for(total_tokens))
+                >= self.max_live_blocks(total_tokens, max_growth))
 
-    def commit(self, slot: int, total_tokens: int) -> None:
-        """Bind `slot` and reserve (without allocating) its growth blocks."""
+    def commit(self, slot: int, total_tokens: int,
+               max_growth: int | None = None) -> None:
+        """Bind `slot` and reserve (without allocating) its growth blocks.
+
+        `max_growth` — the caller's bound on tokens added per `ensure`
+        (the engine's max(prefill_chunk, spec_k + 1)) — caps the
+        reservation of window-reclaimed slots at their live-block bound."""
         if self._bound[slot]:
             raise SlotError(f"slot {slot}: commit on a bound slot "
                             "(release it first)")
         if total_tokens > self.max_len:
             raise OutOfBlocks(f"slot {slot}: {total_tokens} > max_len")
         self._bound[slot] = True
-        self._committed[slot] = self.blocks_for(total_tokens)
+        self._committed[slot] = self.max_live_blocks(total_tokens, max_growth)
 
     def ensure(self, slot: int, n_tokens: int) -> None:
         """Allocate blocks so positions [0, n_tokens) of `slot` are backed."""
@@ -255,14 +311,44 @@ class KVPool:
         if need > self.max_blocks:
             raise OutOfBlocks(f"slot {slot}: {n_tokens} tokens exceed the "
                               f"{self.max_blocks}-entry block table")
-        while len(owned) < need:
+        if self.window is not None:
+            self._reclaim(slot)
+        while self._alloc_upto[slot] < need:
             if not self._free:
                 raise OutOfBlocks(f"slot {slot}: pool exhausted")
             blk = self._free.pop()
-            self._table[slot, len(owned)] = blk
+            self._table[slot, self._alloc_upto[slot]] = blk
             owned.append(blk)
+            self._alloc_upto[slot] += 1
             self._table_dev = None
         self._lengths[slot] = max(self._lengths[slot], n_tokens)
+
+    def _reclaim(self, slot: int) -> None:
+        """Return out-of-window blocks of `slot` to the free list.
+
+        Called from `ensure` BEFORE growth, so the basis length is the
+        committed prefix: every future query sits at qpos >= cur (truncate
+        back below the in-flight chunk lands at >= cur too — spec rollback
+        targets the pre-ensure length). Block j (keys [j*BS, (j+1)*BS)) is
+        dead once its newest key leaves the oldest such query's window:
+        (j+1)*BS - 1 <= cur - window. Freed table entries become the OOB
+        sentinel — gathers read zeros and the kernel skips them, both
+        behind the window mask, so paged output stays bit-identical."""
+        cur = self._lengths[slot]
+        first_live = min(max(0, (cur + 1 - self.window) // self.block_size),
+                         self._alloc_upto[slot])
+        if first_live <= self._live_from[slot]:
+            return
+        for j in range(self._live_from[slot], first_live):
+            blk = int(self._table[slot, j])
+            self._table[slot, j] = self.sentinel
+            self._owned[slot].remove(blk)
+            self._free.append(blk)
+        self._live_from[slot] = first_live
+        self._table_dev = None
+        # freed keys end at first_live*BS - 1; a truncate to n keeps windows
+        # sound only while n - window >= that newest freed key
+        self._floor[slot] = first_live * self.block_size + self.window - 1
 
     def truncate(self, slot: int, n_tokens: int) -> None:
         """Logically shrink `slot` to n_tokens positions (spec rollback).
@@ -277,6 +363,12 @@ class KVPool:
             raise SlotError(
                 f"slot {slot}: truncate to {n_tokens} outside "
                 f"[0, {self._lengths[slot]}]")
+        if n_tokens < self._floor[slot]:
+            # sliding-window reclamation already freed keys the rolled-back
+            # window would need; allowing this would silently read zeros
+            raise SlotError(
+                f"slot {slot}: truncate to {n_tokens} below the "
+                f"window-reclaim floor {self._floor[slot]}")
         self._lengths[slot] = n_tokens
 
     def length(self, slot: int) -> int:
@@ -297,8 +389,12 @@ class KVPool:
         if blocks:
             self._free.extend(reversed(blocks))
             self._owned[slot] = []
+        if self._alloc_upto[slot]:
             self._table[slot, :] = self.sentinel
             self._table_dev = None
+        self._alloc_upto[slot] = 0
+        self._live_from[slot] = 0
+        self._floor[slot] = 0
 
     def table_device(self):
         """Device copy of the block table (None in dense mode)."""

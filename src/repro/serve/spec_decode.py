@@ -72,6 +72,7 @@ class DraftStack:
         self.econf = econf
         self.n_prefix = econf.draft_layers
         self.specs = lm.prefix_specs(cfg, econf.draft_layers)  # validates
+        self.paged_kernel = econf.resolved_paged_kernel()
         e = econf
         self.pool = KVPool(cfg, e.n_slots, e.max_len, paged=e.paged,
                            block_size=e.block_size, n_blocks=e.n_blocks,
@@ -92,6 +93,7 @@ class DraftStack:
         fn = self._propose_fns.get(k)
         if fn is None:
             cfg, scheme, npfx = self.cfg, self.econf.scheme, self.n_prefix
+            pk = self.paged_kernel
 
             def prop_fn(params, caches, table, tok0, pos, active):
                 def body(carry, t):
@@ -99,7 +101,8 @@ class DraftStack:
                     logits, caches, _ = lm.forward_prefix(
                         params, cfg, {"tokens": cur[:, None]}, scheme, _SEED,
                         n_prefix=npfx, caches=caches, mode="decode",
-                        pos=pos + t, active=active, block_table=table)
+                        pos=pos + t, active=active, block_table=table,
+                        paged_kernel=pk)
                     nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
                     return (caches, nxt), nxt
 
@@ -118,12 +121,13 @@ class DraftStack:
         fn = self._step_fns.get(size)
         if fn is None:
             cfg, scheme, npfx = self.cfg, self.econf.scheme, self.n_prefix
+            pk = self.paged_kernel
 
             def step_fn(params, caches, table, tokens, pos, active):
                 logits, caches, _ = lm.forward_prefix(
                     params, cfg, {"tokens": tokens}, scheme, _SEED,
                     n_prefix=npfx, caches=caches, mode="decode", pos=pos,
-                    active=active, block_table=table)
+                    active=active, block_table=table, paged_kernel=pk)
                 return logits, caches
 
             fn = self._step_fns[size] = jax.jit(step_fn, donate_argnums=(1,))

@@ -13,6 +13,18 @@ import pytest
 
 BASE_SEED = 0
 
+# Files whose every test is a Pallas-kernel parity check: the `kernels`
+# marker (pytest.ini) is wired here by path, so `-m kernels` selects the
+# whole contract suite (and `-m "not kernels"` skips interpret-mode Pallas
+# on machines where it is slow) without per-file pytestmark boilerplate.
+_KERNEL_SUITES = {"test_kernels.py", "test_paged_attention.py"}
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if item.fspath.basename in _KERNEL_SUITES:
+            item.add_marker(pytest.mark.kernels)
+
 
 @pytest.fixture(scope="session")
 def base_seed() -> int:

@@ -17,6 +17,7 @@ Strategies come from tests/_hypothesis_compat.py when hypothesis is absent
 failures reproduce deterministically.
 """
 
+import dataclasses
 import math
 import random
 
@@ -28,7 +29,8 @@ except ImportError:  # offline container: seeded-random fallback shim
     from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs.base import ArchConfig
-from repro.serve.kv_pool import KVPool, OutOfBlocks, SlotError
+from repro.serve.kv_pool import (KVPool, OutOfBlocks, SlotError,
+                                 reclaim_window)
 
 pytestmark = pytest.mark.serve
 
@@ -238,3 +240,161 @@ def test_out_of_blocks_exact_boundary():
     pool2.commit(0, MAX_LEN)
     with pytest.raises(OutOfBlocks):
         pool2.ensure(0, MAX_LEN + 1)
+
+
+# ---- sliding-window block reclamation (paged lattn stacks) ----------------
+
+WINDOW = 8
+
+
+def _lattn_cfg() -> ArchConfig:
+    """Pure sliding-window stack (every token-cache layer is lattn)."""
+    from repro.configs import registry
+    base = registry.get("recurrentgemma_9b").reduced()
+    return dataclasses.replace(
+        base, griffin=dataclasses.replace(base.griffin, window=WINDOW,
+                                          pattern=("attn", "attn")))
+
+
+def _wpool(n_blocks=12) -> KVPool:
+    return KVPool(_lattn_cfg(), N_SLOTS, MAX_LEN, paged=True,
+                  block_size=BLOCK, n_blocks=n_blocks)
+
+
+def _conserved(pool: KVPool):
+    """Free-list conservation + no aliasing, reclamation included."""
+    assert pool.free_block_count + sum(
+        len(o) for o in pool._owned) == pool.n_blocks
+    seen = list(pool._free)
+    for o in pool._owned:
+        seen.extend(o)
+    assert sorted(seen) == list(range(pool.n_blocks))
+
+
+def test_reclaim_window_detection():
+    assert reclaim_window(_lattn_cfg()) == WINDOW
+    assert reclaim_window(_tiny_cfg()) is None           # full attention
+    from repro.configs import registry
+    # griffin hybrids qualify too: rec layers hold O(1) slot state, so
+    # lattn layers are the only block owners
+    rg = registry.get("recurrentgemma_9b").reduced()
+    assert reclaim_window(rg) == rg.griffin.window
+    # full-attention pools never get a reclaim window
+    assert _pool().window is None
+
+
+def test_window_blocks_return_to_free_list_mid_sequence():
+    pool = _wpool()
+    pool.commit(0, MAX_LEN)
+    # grow token by token far past the window: live blocks must plateau at
+    # O(window/block), never O(length/block)
+    max_live = 0
+    for n in range(1, MAX_LEN + 1):
+        pool.ensure(0, n)
+        _conserved(pool)
+        max_live = max(max_live, len(pool._owned[0]))
+    bound = math.ceil(WINDOW / BLOCK) + 1
+    assert max_live <= bound, (max_live, bound)
+    # everything before the window horizon is sentinel in the table
+    first_live = (MAX_LEN + 1 - WINDOW) // BLOCK
+    assert all(pool._table[0, :first_live - 1] == pool.sentinel)
+    pool.release(0)
+    _conserved(pool)
+    assert pool.free_block_count == pool.n_blocks
+
+
+def test_window_reclaim_basis_is_pre_ensure_length():
+    """Spec-decode rollback safety: a verify chunk's `ensure` overshoot must
+    not free blocks the post-rollback window still needs — the reclaim basis
+    is the committed (pre-ensure) length, so truncate back to it succeeds."""
+    pool = _wpool()
+    pool.commit(0, MAX_LEN)
+    pool.ensure(0, 10)              # committed prefix
+    owned_before = list(pool._owned[0])
+    pool.ensure(0, 10 + 4)          # verify-chunk overshoot (spec_k+1 = 4)
+    pool.truncate(0, 10)            # full rejection: back to the basis
+    assert pool.length(0) == 10
+    # the overshoot's reclaim must not have freed any committed-window block
+    assert set(owned_before) <= set(pool._owned[0])
+    _conserved(pool)
+    pool.ensure(0, 14)              # regrow: no churn, same blocks
+    _conserved(pool)
+
+
+def test_window_truncate_below_reclaim_floor_raises():
+    pool = _wpool()
+    pool.commit(0, MAX_LEN)
+    pool.ensure(0, 24)              # reclaim horizon well past block 0
+    pool.ensure(0, 25)              # trigger reclaim with basis 24
+    assert pool._floor[0] > 0
+    floor = pool._floor[0]
+    pool.truncate(0, floor)         # exactly at the floor: sound
+    with pytest.raises(SlotError):
+        pool.truncate(0, floor - 1)
+
+
+def test_window_random_walk_conserves_free_list():
+    """Property-style: random grow/truncate/release cycles on a windowed
+    pool keep free + owned == n_blocks and never alias a block."""
+    rng = random.Random(7)
+    pool = _wpool(n_blocks=10)
+    lengths = [0] * N_SLOTS
+    bound = [False] * N_SLOTS
+    for _ in range(300):
+        s = rng.randrange(N_SLOTS)
+        op = rng.choice(["grow", "grow", "truncate", "release"])
+        if not bound[s]:
+            pool.commit(s, MAX_LEN)
+            bound[s] = True
+        if op == "grow":
+            n = min(lengths[s] + rng.randint(1, 5), MAX_LEN)
+            try:
+                pool.ensure(s, n)
+                lengths[s] = max(lengths[s], n)
+            except OutOfBlocks:
+                pass
+        elif op == "truncate":
+            n = rng.randint(max(0, lengths[s] - 3), lengths[s])
+            try:
+                pool.truncate(s, n)
+                lengths[s] = n
+            except SlotError:      # below the reclaim floor: refused
+                pass
+        else:
+            pool.release(s)
+            bound[s] = False
+            lengths[s] = 0
+        _conserved(pool)
+
+
+def test_window_engine_serves_long_request_in_small_pool():
+    """The payoff of reclamation: an engine whose pool holds FAR fewer
+    blocks than blocks_for(prompt + max_new) still admits and completes a
+    long sliding-window request, because admission reserves the live-block
+    bound (window + one growth chunk), not the full length."""
+    import jax
+    from repro.models import lm as LM
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+    cfg = _lattn_cfg()
+    params = LM.init(cfg, jax.random.PRNGKey(0))
+    # total = 8 prompt + 24 new = 32 tokens = 8 blocks of 4; pool has 5.
+    eng = ServeEngine(cfg, params,
+                      EngineConfig(n_slots=1, max_len=32, block_size=BLOCK,
+                                   n_blocks=5, prefill_chunk=4,
+                                   scheme="bf16", prequant=False))
+    assert eng.pool.window == WINDOW
+    eng.submit(Request(prompt=[1] * 8, max_new=24))
+    res = eng.run()
+    assert len(res) == 1 and len(res[0].tokens) == 24
+    assert eng.pool.free_block_count == 5          # all reclaimed + released
+
+
+def test_window_max_live_blocks_bound():
+    pool = _wpool()
+    # windowed + growth-bounded: capped at blocks_for(W + growth) + 2
+    assert pool.max_live_blocks(MAX_LEN, 4) == math.ceil((WINDOW + 4) / BLOCK) + 2
+    # no growth bound supplied -> conservative full-length reservation
+    assert pool.max_live_blocks(MAX_LEN) == MAX_BLOCKS
+    # unwindowed pools ignore max_growth entirely
+    assert _pool().max_live_blocks(MAX_LEN, 4) == MAX_BLOCKS
