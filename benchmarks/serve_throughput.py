@@ -23,6 +23,15 @@ Rows (tok/s = generated tokens per wall-second of decode):
                              Pallas kernel (kernels/paged_attention.py;
                              interpret mode on CPU, so wall time here is NOT
                              the story — the modeled bytes/token column is)
+  serve/decode_sharded     — the mesh-sharded engine (EngineConfig.mesh):
+                             slot-affine pool + shard_map decode over a
+                             simulated (data=2, model=1) host-platform mesh
+                             (benchmarks/run.py forces 2 CPU devices; falls
+                             back to data=1 when unavailable). Wall time on
+                             simulated CPU shards measures DISPATCH overhead
+                             only — the point of the row is exercising the
+                             sharded path in CI and regressing its delta vs
+                             decode_gather in BENCH_serve.json
 
 The decode_* rows also land in BENCH_serve.json with a modeled
 bytes-moved-per-token estimate: dense and gather traffic scale with POOL
@@ -173,7 +182,41 @@ def _decode_path_rows(cfg, params, prompts, max_new, scheme, max_len=64):
             "pool_capacity": max_len,
             "mean_seq_len": mean_len,
         }
+    rows.append(_sharded_decode_row(cfg, params, prompts, max_new, scheme,
+                                    detail, max_len=max_len))
     return rows, detail
+
+
+def _sharded_decode_row(cfg, params, prompts, max_new, scheme, detail,
+                        max_len=64):
+    """serve/decode_sharded: the mesh-sharded engine on a simulated
+    (data=S, model=1) mesh, S = 2 when the process has two devices
+    (benchmarks/run.py forces them via XLA_FLAGS). Appends its detail next
+    to the dense/gather/kernel paths so BENCH_serve.json tracks the
+    sharded-vs-gather delta across PRs."""
+    from repro.launch.mesh import make_serve_mesh
+    shards = 2 if jax.device_count() >= 2 else 1
+    mesh = make_serve_mesh(shards, 1)
+    econf = EngineConfig(n_slots=len(prompts), max_len=max_len,
+                         prefill_chunk=16, paged=True, prequant=True,
+                         scheme=scheme, mesh=mesh)
+    eng = ServeEngine(cfg, params, econf)
+    _warm_and_reset(eng, prompts[0], 2)
+    for p in prompts:
+        eng.submit(Request(prompt=p, max_new=max_new))
+    eng.run()
+    st = eng.stats
+    tps = st["decode_tokens"] / max(st["decode_s"], 1e-9)
+    base = detail.get("gather", {}).get("tok_s", 0.0)
+    detail["sharded"] = {
+        "tok_s": round(tps, 2),
+        "data_shards": shards,
+        "delta_vs_gather": round(tps / base, 3) if base else None,
+        "pool_capacity": max_len,
+    }
+    return ("serve/decode_sharded", 1e6 / tps,
+            f"tok_s={tps:.1f} data_shards={shards}"
+            + (f" delta_vs_gather={tps / base:.2f}x" if base else ""))
 
 
 def _emit_bench_json(decode_paths, rows, smoke):

@@ -5,11 +5,37 @@ prefill + batched decode.
     PYTHONPATH=src python examples/serve_decode.py [--arch yi_9b] [--tokens 32]
 
 `--legacy` runs the old fixed-batch greedy loop instead (the baseline the
-benchmark compares against).
+benchmark compares against). `--data-shards N` serves through the
+mesh-sharded engine (slot-affine pool over a (data=N, model=1) mesh),
+simulating N host-platform devices on CPU.
 """
 
 import argparse
+import os
+import sys
 import time
+
+def _early_data_shards(argv):
+    """--data-shards value, read BEFORE the first jax import (jax locks the
+    device count at init). Handles both '--data-shards N' and
+    '--data-shards=N'; malformed values fall through to argparse's error."""
+    for i, a in enumerate(argv):
+        try:
+            if a == "--data-shards" and i + 1 < len(argv):
+                return int(argv[i + 1])
+            if a.startswith("--data-shards="):
+                return int(a.split("=", 1)[1])
+        except ValueError:
+            return 1
+    return 1
+
+
+_n = _early_data_shards(sys.argv)
+if _n > 1 and "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_n}").strip()
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +73,10 @@ def main():
                     help="block-table flash-decode Pallas kernel "
                          "(default: on for TPU, off for CPU where it would "
                          "run interpreted; 'on' forces interpret mode)")
+    ap.add_argument("--data-shards", type=int, default=1,
+                    help="serve through the mesh-sharded engine: slots + "
+                         "slot-affine KV pool over a (data=N, model=1) mesh "
+                         "(greedy streams stay bitwise identical in bf16)")
     args = ap.parse_args()
 
     backend = jax.default_backend().upper()
@@ -73,12 +103,16 @@ def main():
         from repro.models.lm import total_layers
         draft_layers = max(1, total_layers(cfg) // 2)
     max_len = ((s + args.tokens + args.spec_k) // 16 + 2) * 16
+    mesh = None
+    if args.data_shards > 1:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(args.data_shards, 1)
     eng = ServeEngine(cfg, params, EngineConfig(
         n_slots=b, max_len=max_len, prefill_chunk=16,
         paged=not args.dense, prequant=not args.no_prequant,
         scheme=args.scheme, spec_k=args.spec_k, draft_layers=draft_layers,
         paged_kernel=(None if args.paged_kernel is None
-                      else args.paged_kernel == "on")))
+                      else args.paged_kernel == "on"), mesh=mesh))
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k)
     ids = [eng.submit(Request(prompt=p, max_new=args.tokens, sampling=sp))
            for p in prompts]
@@ -89,7 +123,9 @@ def main():
 
     print(f"arch={cfg.name} scheme={args.scheme} engine "
           f"(paged={not args.dense}, prequant={not args.no_prequant}, "
-          f"paged_kernel={eng.paged_kernel})")
+          f"paged_kernel={eng.paged_kernel}"
+          + (f", data_shards={eng.data_shards}" if mesh is not None else "")
+          + ")")
     print(f"prefill: {st['prefill_tokens']} tokens in {st['prefill_s']*1e3:.0f}ms")
     print(f"decode:  {st['decode_tokens']} tokens over {st['decode_steps']} "
           f"steps = {st['decode_tokens']/max(st['decode_s'],1e-9):.1f} tok/s "

@@ -3,18 +3,27 @@ compression, and a version-spanning `shard_map` shim.
 
 `shard_map` moved from `jax.experimental.shard_map` (kwarg `check_rep`) to
 `jax.shard_map` (kwarg `check_vma`) across jax releases; callers here use one
-spelling and run on either.
+spelling and run on either. Repo-wide distribution conventions (this shim,
+the OOB-high scatter-sentinel rule) are recorded in docs/CONVENTIONS.md.
 """
 
 from __future__ import annotations
 
 
-def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, check_rep=None):
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, check_rep=None,
+              auto=None):
     """`jax.shard_map` / `jax.experimental.shard_map` compat wrapper.
 
     `check_vma` (new spelling) and `check_rep` (old spelling) are the same
     knob; pass either and it is translated to whatever the installed jax
     expects.
+
+    `auto` names mesh axes left under GSPMD control while the rest go
+    manual — the sharded serving step uses it to keep packed weights
+    "model"-partitioned (XLA inserts the reductions) inside a manual
+    "data"-split over decode slots. Requires a jax whose shard_map takes
+    `auto`; passing a non-empty set on one that doesn't raises TypeError
+    rather than silently computing with replicated weights.
     """
     flag = check_vma if check_vma is not None else check_rep
     try:
@@ -23,4 +32,6 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, check_rep=None):
     except ImportError:
         from jax.experimental.shard_map import shard_map as _sm
         kw = {} if flag is None else {"check_rep": flag}
+    if auto:
+        kw["auto"] = frozenset(auto)
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -16,6 +16,24 @@ The rules are name- and shape-driven (no per-arch tables):
 
 An axis is only assigned when its size divides the mesh axis size — GSPMD
 would otherwise pad-and-replicate, which costs more wire than replication.
+
+SERVING (`serve_*` below — serve/engine.py mesh mode) uses a different split
+of the same mesh, because decode-step traffic is cache-dominated and the
+slot-affine KV pool (serve/kv_pool.py) makes every cache access shard-local:
+
+  - every KV-pool cache leaf shards axis 1 — the physical-BLOCK axis of
+    token kinds, the SLOT axis of recurrent state / dense caches — over
+    "data", never the feature axis (the decode step is manual over "data"
+    via shard_map; feature-axis splits would force collectives *inside*
+    each manual shard for no bandwidth win at decode batch sizes);
+  - `PackedQWeight` leaves (quantize-once NVFP4 weights, core/linear.py)
+    shard their out-feature axis — `packed`/`scales8` axis -2 — over
+    "model"; the per-matrix `gscale` replicates. "model" stays a GSPMD
+    `auto` axis inside the serving shard_map, so XLA inserts the activation
+    reductions for the row-split GEMMs;
+  - raw serving leaves (embeddings, norms, MLA's wkv_b, the head) fall back
+    to `param_spec` with fsdp off — "data" never appears on weights (every
+    shard needs the full model to decode its own slots).
 """
 
 from __future__ import annotations
@@ -123,3 +141,58 @@ def input_shardings(batch, mesh):
         return NamedSharding(mesh, P(*axes))
 
     return jax.tree.map(one, batch)
+
+
+# --------------------------------------------------------------------------
+# serving (mesh-sharded ServeEngine: slot-affine pool over "data", packed
+# weights over "model" — see the module docstring and serve/README.md)
+# --------------------------------------------------------------------------
+
+# every serving-cache leaf — (stack, n_blocks, block, ...) token pools,
+# (stack, n_slots, ...) recurrent state, (stack, n_slots, max_len, ...) dense
+# caches — splits its axis-1 slot/block home over "data"; usable directly as
+# the shard_map in/out spec prefix for the whole cache pytree
+SERVE_CACHE_SPEC = P(None, "data")
+
+
+def packed_weight_spec(shape: tuple[int, ...], *, model: int) -> P:
+    """Spec for one field of a PackedQWeight: `packed` (..., N, K/2) and
+    `scales8` (..., N, K/16) shard the out-feature axis N over "model"
+    (group boundaries along K stay device-local by construction); the
+    per-matrix `gscale` (...,) replicates. Leading stacked layer/expert axes
+    are never sharded, mirroring `param_spec`."""
+    axes: list = [None] * len(shape)
+    if len(shape) >= 2 and _div(shape[-2], model):
+        axes[-2] = "model"
+    return P(*axes)
+
+
+def serve_param_shardings(params, mesh):
+    """NamedShardings for a serving params pytree (prequantized or raw).
+
+    PackedQWeight leaves use `packed_weight_spec`; raw leaves use the
+    training `param_spec` with fsdp off, so only "model" is ever assigned —
+    inside the serving shard_map "data" is a MANUAL axis over decode slots
+    and weights must be replicated across it. Works on concrete arrays and
+    on eval_shape structs (dry-run lowering)."""
+    from repro.core.linear import PackedQWeight
+    model, _ = _mesh_sizes(mesh)
+
+    def one(path, leaf):
+        if isinstance(leaf, PackedQWeight):
+            return PackedQWeight(
+                *(NamedSharding(mesh, packed_weight_spec(tuple(f.shape),
+                                                         model=model))
+                  for f in leaf))
+        spec = param_spec(_path_str(path), tuple(leaf.shape),
+                          model=model, data=1, fsdp=False)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(
+        one, params, is_leaf=lambda x: isinstance(x, PackedQWeight))
+
+
+def serve_cache_shardings(cache, mesh):
+    """NamedShardings placing every serving-cache leaf on SERVE_CACHE_SPEC."""
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, SERVE_CACHE_SPEC), cache)

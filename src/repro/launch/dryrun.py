@@ -36,7 +36,8 @@ from repro.launch import hlo_cost
 from repro.launch import specs as SPECS
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm
-from repro.serve.decode import make_paged_serve_step, make_prefill_step
+from repro.serve.decode import (make_paged_serve_step, make_prefill_step,
+                                make_sharded_serve_step)
 from repro.train.train_step import make_train_step
 
 # TPU v5e roofline constants (per chip)
@@ -70,13 +71,17 @@ def model_flops(cfg, shape_name: str) -> float:
 
 def run_cell(arch: str, shape: str, *, multi_pod: bool, scheme: str,
              fsdp: bool | None = None, remat: bool = True,
-             hints: bool | None = None, verbose: bool = True) -> dict:
+             hints: bool | None = None, verbose: bool = True,
+             serve_sharded: bool = False) -> dict:
     cfg = registry.get(arch)
     cell = SHAPES[shape]
     if cell.name == "long_500k" and not cfg.subquadratic:
         return {"arch": arch, "shape": shape, "skipped":
                 "full-attention arch; 500k decode requires sub-quadratic "
                 "attention (DESIGN.md Section 4)"}
+    if serve_sharded and cell.kind != "decode":
+        return {"arch": arch, "shape": shape, "skipped":
+                "--serve-sharded applies to decode cells only"}
 
     # big models need FSDP for optimizer state; small ones stay TP-only
     n_params = sum(x.size for x in jax.tree.leaves(SPECS.param_specs(cfg)))
@@ -128,6 +133,34 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, scheme: str,
             jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, b_sh),
                              out_shardings=(None, c_sh))
             lowered = jitted.lower(params_s, cache_s, batch_s)
+        elif cell.kind == "decode" and serve_sharded:
+            # the SHARDED engine step (serve/decode.make_sharded_serve_step):
+            # slot-affine pool + per-slot LOCAL block tables under a manual
+            # shard_map over "data", prequantized (packed NVFP4) weights +
+            # head under GSPMD on "model". The before/after pair with the
+            # baseline decode cell below is the PR's acceptance measurement:
+            # the baseline all-gathers the pool every step (XLA cannot prove
+            # a replicated table's rows are device-local); slot affinity
+            # makes the same gather provably local, so the only collectives
+            # left are activation-sized "model" reductions.
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.serve.prequant import prequantize_specs
+            data = dict(mesh.shape).get("data", 1)
+            if cell.global_batch % data:
+                return {"arch": arch, "shape": shape, "skipped":
+                        f"decode batch {cell.global_batch} not divisible by "
+                        f"the mesh data axis ({data}): slot sharding needs "
+                        "equal shard extents"}
+            fn = make_sharded_serve_step(cfg, scheme, mesh)
+            in_s, cache_s = SPECS.paged_decode_specs(cfg, shape)
+            params_q = prequantize_specs(params_s, cfg, scheme)
+            p_sh = SH.serve_param_shardings(params_q, mesh)
+            c_sh = SH.serve_cache_shardings(cache_s, mesh)
+            d_sh = NamedSharding(mesh, P("data"))
+            jitted = jax.jit(fn, in_shardings=(
+                p_sh, c_sh, d_sh, d_sh, d_sh, d_sh))
+            lowered = jitted.lower(params_q, cache_s, in_s["table"],
+                                   in_s["tokens"], in_s["pos"], in_s["active"])
         else:  # decode — the engine's paged step (pos vector + block table),
             # so the cost model prices the pool gather/scatter traffic the
             # serving hot path actually moves (not the legacy dense cache).
@@ -135,10 +168,10 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, scheme: str,
             # generic cache sharding puts the pool's BLOCK axis on "data",
             # and with a replicated block table XLA cannot prove any row's
             # blocks are device-local, so the gather all-gathers the pool
-            # every step. That priced pain is the case for the ROADMAP
-            # multi-host item (slot-affine pool sharding, per-slot host
-            # tables) — and for the paged_attention kernel, which replaces
-            # the gather wholesale on-device.
+            # every step. That priced pain is what the --serve-sharded cell
+            # above makes local (slot-affine pool sharding, per-slot host
+            # tables) — and what the paged_attention kernel replaces
+            # wholesale on-device.
             fn = make_paged_serve_step(cfg, scheme)
             in_s, cache_s = SPECS.paged_decode_specs(cfg, shape)
             p_sh = SH.state_shardings(params_s, mesh, fsdp=fsdp)
@@ -197,6 +230,22 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, scheme: str,
         # 1.0 == perfectly compute-bound: the dominant term IS the matmuls
         "roofline_fraction": t_compute / max(t_compute, t_memory, t_coll, 1e-30),
     }
+    if cell.kind == "decode":
+        # pool-collective accounting: the acceptance bar for slot-affine
+        # sharding is that NO decode step moves pool-scale collectives.
+        # Yardstick: one "data"-shard's pool slice — the baseline paged
+        # step's replicated-table gather moves a multiple of it over the
+        # wire every step (llama_200m decode_32k: 37.8 GB/dev ~ 3x the
+        # 13 GB slice), while the slot-affine sharded step's remaining
+        # collectives are activation-sized (~4 MB/dev, "model" reductions)
+        pool_bytes = sum(x.size * x.dtype.itemsize
+                         for x in jax.tree.leaves(cache_s))
+        pool_slice = pool_bytes / max(dict(mesh.shape).get("data", 1), 1)
+        result["serve_sharded"] = serve_sharded
+        result["pool_bytes_global"] = pool_bytes
+        result["pool_bytes_per_data_shard"] = pool_slice
+        result["no_pool_allgather"] = bool(
+            coll.get("total", 0.0) < 0.1 * pool_slice)
     if verbose:
         print(f"[dryrun] {arch} x {shape} on {result['mesh']} ({scheme}) — "
               f"compile {t_compile:.1f}s")
@@ -228,6 +277,10 @@ def main():
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--hints", action="store_true",
                     help="qlinear Megatron-layout sharding hints (Perf iter 1)")
+    ap.add_argument("--serve-sharded", action="store_true",
+                    help="decode cells lower the slot-affine SHARDED serving "
+                         "step (shard_map over 'data', prequantized weights "
+                         "over 'model') instead of the baseline paged step")
     ap.add_argument("--fsdp", default=None, choices=["on", "off"])
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--jobs", type=int, default=2)
@@ -274,10 +327,12 @@ def main():
                    scheme=args.scheme,
                    fsdp=None if args.fsdp is None else args.fsdp == "on",
                    remat=not args.no_remat,
-                   hints=True if args.hints else None)
+                   hints=True if args.hints else None,
+                   serve_sharded=args.serve_sharded)
     tag = (f"{args.arch}_{args.shape}_"
            f"{'2x16x16' if args.multi_pod else '16x16'}_{args.scheme}"
-           + ("_hints" if (args.hints or os.environ.get('REPRO_SHARDING_HINTS') == '1') else ""))
+           + ("_hints" if (args.hints or os.environ.get('REPRO_SHARDING_HINTS') == '1') else "")
+           + ("_sharded" if args.serve_sharded else ""))
     with open(os.path.join(args.out, tag + ".json"), "w") as f:
         json.dump(res, f, indent=1)
     print(f"[dryrun] wrote {tag}.json")

@@ -29,3 +29,12 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Elastic variant: any (pod, data, model) factorization of the job's
     device count (checkpoints are mesh-independent, see checkpoint/)."""
     return _mk(shape, axes)
+
+
+def make_serve_mesh(data: int, model: int = 1):
+    """(data, model) mesh for the mesh-sharded serving engine
+    (`EngineConfig(mesh=...)`): decode slots + the slot-affine KV pool split
+    over "data", packed weights over "model". Tests simulate `data=2` on CPU
+    via `--xla_force_host_platform_device_count` (set before any jax import;
+    tests/conftest.py does this for the whole suite)."""
+    return _mk((data, model), ("data", "model"))

@@ -55,7 +55,12 @@ def paged_decode_specs(cfg: ArchConfig, shape: str, *,
 
     Pure-lattn stacks size the pool at O(window) blocks per slot (the
     sliding-window reclamation bound in serve/kv_pool.py), which is exactly
-    why long_500k decode state stays sublinear for the hybrid archs."""
+    why long_500k decode state stays sublinear for the hybrid archs.
+
+    The --serve-sharded decode cells reuse these structs unchanged: shapes
+    are identical under slot-affine sharding — only the table's VALUE
+    semantics shift to shard-local physical indices (KVPool.table_device),
+    which a ShapeDtypeStruct never sees."""
     from repro.serve import kv_pool as KV
     cell = SHAPES[shape]
     b, s = cell.global_batch, cell.seq_len

@@ -247,6 +247,13 @@ def gqa_decode(p, x, cfg, scheme, seed, layer, cache_kv, pos, *, window=None,
     paged_kernel: attend with the block-table flash-decode Pallas kernel
       (kernels/paged_attention.py) instead of materializing gather_view
       copies — O(row length) HBM traffic instead of O(table capacity).
+
+    Contract: this step is ROW-LOCAL (row b reads/writes only row b of x,
+    positions, and the cache — shard-local block-table indices included),
+    so the mesh-sharded serving engine may split the batch and pool across
+    a shard_map "data" axis without changing a bit, and the sentinel is
+    always derived from the (possibly shard-local) pool leaf itself
+    (docs/CONVENTIONS.md §2-3).
     """
     b, sq = x.shape[:2]
     posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))

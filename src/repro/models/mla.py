@@ -88,7 +88,12 @@ def mla_decode(p, x, cfg, scheme, seed, layer, cache, pos, *, active=None,
 
     NOTE: wkv_b participates as a RAW bf16/f32 matrix here (absorbed einsums
     are not quantized GEMMs), so the quantize-once weight cache leaves it
-    unpacked (see serve/prequant.py).
+    unpacked (see serve/prequant.py) and the serving sharding rules keep it
+    replicated (dist/sharding.py).
+
+    Contract: row-local like gqa_decode — the sharded engine splits batch
+    and latent pools over a shard_map "data" axis (shard-local table
+    indices), which must not change a bit (docs/CONVENTIONS.md §3).
     """
     m = cfg.mla
     b, sq = x.shape[:2]

@@ -3,12 +3,17 @@
 Modules (import them directly; this package init stays import-free so the
 model code can reach `repro.serve.kv_pool` without cycles):
 
-    engine      — ServeEngine: continuous batching, admission control, slots
+    engine      — ServeEngine: continuous batching, admission control, slots;
+                  EngineConfig.mesh switches on mesh-sharded multi-host mode
     kv_pool     — block-based paged KV pool + per-sequence block tables,
-                  truncate/rollback API, recurrent-state snapshots
+                  truncate/rollback API, recurrent-state snapshots,
+                  slot-affine sharded allocation (n_shards)
     spec_decode — self-speculative draft/verify loop (truncated-stack draft,
-                  exact bitwise greedy verification)
+                  exact bitwise greedy verification, rejection-sampled
+                  stochastic acceptance)
     prequant    — quantize-once NVFP4 weight cache
-    sampling    — greedy / temperature / top-k sampling + spec acceptance
-    decode      — thin compatibility wrappers (prefill/serve steps, greedy loop)
+    sampling    — greedy / temperature / top-k sampling, spec acceptance,
+                  distribution-preserving speculative_resample
+    decode      — prefill/serve step builders (incl. the shard_map-wrapped
+                  sharded step) + the legacy fixed-batch greedy loop
 """

@@ -1,12 +1,13 @@
-"""Serving entry points: prefill and single-token decode steps.
+"""Serving step builders: prefill, decode, and the mesh-sharded decode step.
 
-This module is the thin compatibility layer kept for the launch/dryrun cost
-model and the simple examples; the production path is `serve.engine
-.ServeEngine` (continuous batching, paged KV pool, quantize-once weights).
+`make_paged_serve_step` is THE engine step (serve/engine.py compiles it per
+chunk size; launch/dryrun lowers it for decode cells), and
+`make_sharded_serve_step` is its multi-host form — the same function body
+under a manual-"data" / auto-"model" `shard_map` (slot-affine pool slices,
+shard-local block tables; see serve/README.md "Multi-host serving").
+`make_serve_step`/`greedy_generate` remain as the legacy dense-cache
+fixed-batch path (benchmarks' seed baseline, simple examples).
 
-`serve_step` is what decode_32k / long_500k lower: one new token against a
-pre-allocated KV/state cache at a traced position — now a PER-SEQUENCE (B,)
-position vector (scalars broadcast), so ragged batches decode correctly.
 Forward quantization (RTN + 4/6) is deterministic, so serving needs no
 per-step randomness — the seed below is a fixed constant feeding the
 (unused-in-inference) backward.
@@ -40,7 +41,71 @@ def make_serve_step(cfg, scheme: str):
     return serve_step
 
 
-def make_paged_serve_step(cfg, scheme: str, *, paged_kernel: bool = False):
+def make_sharded_serve_step(cfg, scheme: str, mesh, *,
+                            paged_kernel: bool = False):
+    """The engine's decode/prefill/verify step wrapped in a `shard_map` over
+    the mesh's "data" axis — the multi-host serving hot path.
+
+    Split of labor (see serve/README.md "Multi-host serving"):
+
+      manual over "data" — decode slots, the KV pool (block axis of token
+        kinds, slot axis of state kinds / dense caches), the block table,
+        and the per-slot tokens/pos/active inputs all enter pre-split
+        (`in_specs` below). The pool allocator is slot-affine
+        (`KVPool(n_shards=...)`) and `table_device()` carries SHARD-LOCAL
+        physical indices, so every gather/scatter the step performs resolves
+        inside the local pool slice: the forward body runs UNCHANGED on
+        local shapes, and no collective ever touches the pool.
+      auto over every other axis ("model", "pod") — weights stay under
+        GSPMD control, so `PackedQWeight` leaves placed with
+        `dist.sharding.serve_param_shardings` compute row-split GEMMs with
+        XLA-inserted activation reductions (activation-sized, not
+        pool-sized, wire).
+
+    Exactness: the decode forward is row-local per slot (docs/CONVENTIONS.md
+    records the contract), so with model=1 the emitted greedy streams are
+    BITWISE identical to the single-host engine — tests/test_serve_sharded.py
+    pins this. check_rep is off: replication checking cannot see through the
+    auto axes.
+
+    When an auto axis is non-trivial (model > 1) the layer scan is fully
+    UNROLLED: this XLA CHECK-fails propagating shardings into a while body
+    inside a manual-subgroup region (lm._run_stages documents the failure).
+    """
+    return shard_serve_step(
+        make_paged_serve_step(cfg, scheme, paged_kernel=paged_kernel,
+                              unroll_stages=_needs_unroll(mesh)), mesh)
+
+
+def _needs_unroll(mesh) -> bool:
+    """True when the mesh carries a non-trivial GSPMD `auto` axis (anything
+    but "data" with size > 1) — the configuration whose while-body sharding
+    propagation is broken; see make_sharded_serve_step."""
+    return any(ax != "data" and size > 1 for ax, size in dict(mesh.shape).items())
+
+
+def shard_serve_step(step, mesh, *, out_batch_axis: int = 0):
+    """shard_map-wrap any engine-step-signature function
+    `(params, cache, table, tokens, pos, active) -> (out, cache)` with the
+    standard serving specs: params replicated over the manual "data" axis
+    (every other mesh axis auto / GSPMD), cache leaves split on axis 1
+    (block / slot homes), per-slot inputs split on axis 0, and `out` split
+    on `out_batch_axis` (0 for (B, S, V) logits; the speculative propose
+    scan passes 1 for its (K, B) token stack)."""
+    from repro import dist
+    auto = frozenset(a for a in mesh.axis_names if a != "data")
+    P = jax.sharding.PartitionSpec
+    out_spec = P(*([None] * out_batch_axis), "data")
+    return dist.shard_map(
+        step, mesh=mesh,
+        in_specs=(P(), P(None, "data"), P("data"), P("data"), P("data"),
+                  P("data")),
+        out_specs=(out_spec, P(None, "data")),
+        check_rep=False, auto=auto)
+
+
+def make_paged_serve_step(cfg, scheme: str, *, paged_kernel: bool = False,
+                          unroll_stages: bool = False):
     """The ENGINE's decode step signature (per-slot position vector, active
     mask, block table, pool-shaped caches) — what launch/dryrun lowers for
     decode cells so the cost model prices the paged gather/scatter traffic
@@ -53,7 +118,8 @@ def make_paged_serve_step(cfg, scheme: str, *, paged_kernel: bool = False):
                                       jnp.asarray(_SEED), caches=cache,
                                       mode="decode", pos=pos, active=active,
                                       block_table=table,
-                                      paged_kernel=paged_kernel)
+                                      paged_kernel=paged_kernel,
+                                      unroll_stages=unroll_stages)
         return logits, cache
     return paged_serve_step
 

@@ -31,18 +31,19 @@ import time
 from collections import deque
 from dataclasses import dataclass, field
 
+from typing import Any
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models import lm
+from repro.serve import decode as serve_decode
 from repro.serve import spec_decode
 from repro.serve.kv_pool import KVPool
 from repro.serve.prequant import prequantize
-from repro.serve.sampling import SamplingParams, sample_tokens
-
-_SEED = jnp.array([7, 7], jnp.uint32)  # deterministic forward; see decode.py
+from repro.serve.sampling import (SamplingParams, sample_tokens,
+                                  speculative_resample)
 
 FREE, PREFILL, DECODE = "free", "prefill", "decode"
 
@@ -90,6 +91,12 @@ class EngineConfig:
     # forces the kernel (interpret mode off-TPU — how the parity tests
     # drive it); requires paged=True.
     paged_kernel: bool | None = None
+    # mesh-sharded serving (launch.mesh.make_serve_mesh): decode slots + the
+    # slot-affine KV pool shard over the mesh's "data" axis (manual
+    # shard_map — no pool collectives), packed weights + LM head over
+    # "model" (GSPMD auto). None = single-host (all steps unwrapped).
+    # Requires n_slots and the pool's n_blocks divisible by the "data" size.
+    mesh: Any = None
 
     def resolved_paged_kernel(self) -> bool:
         if self.paged_kernel is None:
@@ -123,8 +130,28 @@ class ServeEngine:
             raise ValueError("paged_kernel=True requires paged=True (the "
                              "kernel consumes pool-shaped leaves + a block "
                              "table; dense caches have neither)")
+        self.mesh = e.mesh
+        self.data_shards = 1
+        if self.mesh is not None:
+            self.data_shards = dict(self.mesh.shape).get("data", 1)
+            if e.n_slots % self.data_shards:
+                raise ValueError(
+                    f"n_slots={e.n_slots} must divide over the mesh 'data' "
+                    f"axis ({self.data_shards}): shard_map splits the slot "
+                    "batch evenly")
         self.pool = KVPool(cfg, e.n_slots, e.max_len, paged=e.paged,
-                           block_size=e.block_size, n_blocks=e.n_blocks)
+                           block_size=e.block_size, n_blocks=e.n_blocks,
+                           n_shards=self.data_shards)
+        if self.mesh is not None:
+            # commit the hot state to its serving layout up front: packed
+            # weights + head over "model", cache block/slot homes over
+            # "data" — the jitted steps then never reshard
+            from repro.dist import sharding as SH
+            self.params = jax.device_put(
+                self.params, SH.serve_param_shardings(self.params, self.mesh))
+            self.pool.caches = jax.device_put(
+                self.pool.caches,
+                SH.serve_cache_shardings(self.pool.caches, self.mesh))
         if e.spec_k > 0:
             if e.draft_layers <= 0:
                 raise ValueError("spec_k > 0 requires draft_layers >= 1")
@@ -137,6 +164,15 @@ class ServeEngine:
                     f"spec_k={e.spec_k} needs spec_k + 1 < rwkv.chunk "
                     f"({cfg.rwkv.chunk}) for exact verification")
             self.draft = spec_decode.DraftStack(cfg, self.params, e)
+            # one compiled resampler serves every stochastic slot (shapes
+            # are fixed per engine: (spec_k,) drafts, (spec_k+1, V) logits;
+            # temperature/top_k are traced scalars, so no per-value
+            # recompiles) — spec_round would otherwise dispatch the whole
+            # sort/softmax/categorical chain eagerly per slot per round
+            self._resample = jax.jit(
+                lambda drafts, target_logits, key, temp, tk:
+                speculative_resample(drafts, None, target_logits, key,
+                                     temperature=temp, top_k=tk))
         else:
             self.draft = None
         # a verify chunk writes up to spec_k positions past a sequence's
@@ -170,24 +206,20 @@ class ServeEngine:
         if len(self.queue) >= self.econf.max_queue:
             self.stats["rejected"] += 1
             raise QueueFull(f"queue at capacity ({self.econf.max_queue})")
-        # temperature 0 is greedy regardless of top_k (the sampler ignores
-        # the filter on greedy rows), so only a positive temperature makes a
-        # request stochastic
-        if self.econf.spec_k > 0 and request.sampling.temperature != 0.0:
-            raise NotImplementedError(
-                "speculative decoding accepts greedily; stochastic requests "
-                "need the rejection-sampling hook "
-                "(serve.sampling.speculative_resample)")
         total = len(request.prompt) + request.max_new + self._margin
         if not self.pool.can_ever_admit(total, self._max_growth):
             # reject now: an unservable request would head-of-line block the
             # FIFO forever (can_admit never becomes true)
             self.stats["rejected"] += 1
+            bound = (f"{self.pool.blocks_per_shard} blocks per shard "
+                     f"(slot-affine, {self.pool.n_shards} shards)"
+                     if self.pool.n_shards > 1
+                     else f"{self.pool.n_blocks} blocks")
             raise ValueError(
                 f"request needs {total} positions "
                 f"({self.pool.max_live_blocks(total, self._max_growth)} live "
                 f"blocks) but the pool serves at most "
-                f"max_len={self.econf.max_len} / {self.pool.n_blocks} blocks")
+                f"max_len={self.econf.max_len} / {bound}")
         request.req_id = next(self._ids)
         self.queue.append(request)
         return request.req_id
@@ -219,18 +251,23 @@ class ServeEngine:
         return finished
 
     def _admit(self) -> None:
-        for i, slot in enumerate(self.slots):
-            if not self.queue:
-                break
-            if slot.state != FREE:
-                continue
+        while self.queue:
             req = self.queue[0]
             total = len(req.prompt) + req.max_new + self._margin
-            if not self.pool.can_admit(total, self._max_growth) or (
-                    self.draft is not None
-                    and not self.draft.pool.can_admit(total,
-                                                      self._max_growth)):
+            # FIFO head request -> the first FREE slot whose SHARD can back
+            # it (slot-affine pools admit per shard; single-host pools
+            # ignore the slot argument, preserving the original behavior)
+            target = next(
+                (i for i, s in enumerate(self.slots)
+                 if s.state == FREE
+                 and self.pool.can_admit(total, self._max_growth, slot=i)
+                 and (self.draft is None
+                      or self.draft.pool.can_admit(total, self._max_growth,
+                                                   slot=i))),
+                None)
+            if target is None:
                 break  # FIFO: don't starve the head request
+            i = target
             self.queue.popleft()
             self.pool.reset_slot(i)
             self.pool.commit(i, total, self._max_growth)
@@ -339,16 +376,18 @@ class ServeEngine:
     def _forward(self, size: int, tokens, pos, active):
         fn = self._step_fns.get(size)
         if fn is None:
-            cfg, scheme = self.cfg, self.econf.scheme
-            pk = self.paged_kernel
-
-            def step_fn(params, caches, table, tokens, pos, active):
-                logits, caches, _ = lm.forward(
-                    params, cfg, {"tokens": tokens}, scheme, _SEED,
-                    caches=caches, mode="decode", pos=pos, active=active,
-                    block_table=table, paged_kernel=pk)
-                return logits, caches
-
+            # one engine-step builder serves both layouts (block_table=None
+            # is the dense path); under a mesh the step is shard_map-wrapped:
+            # manual over "data" (slots/pool/table/inputs pre-split,
+            # shard-local gather/scatter), auto over "model" (GSPMD weights)
+            if self.mesh is not None:
+                step_fn = serve_decode.make_sharded_serve_step(
+                    self.cfg, self.econf.scheme, self.mesh,
+                    paged_kernel=self.paged_kernel)
+            else:
+                step_fn = serve_decode.make_paged_serve_step(
+                    self.cfg, self.econf.scheme,
+                    paged_kernel=self.paged_kernel)
             # donate the cache pytree: the pool is the dominant serving
             # allocation and the step rebinds it, so XLA may update in place
             # instead of double-buffering it
@@ -357,6 +396,15 @@ class ServeEngine:
             self.params, self.pool.caches, self.pool.table_device(),
             jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(active))
         return logits
+
+    def _spec_key(self, slot: int):
+        """Per-(round, slot) key for stochastic speculative acceptance
+        (sampling.speculative_resample). Shares the engine's tick counter
+        with `_sample`, so streams stay deterministic run-to-run for a
+        fixed base_seed and submission order."""
+        self._tick += 1
+        return jax.random.fold_in(
+            jax.random.fold_in(self._key, self._tick), 10_000 + slot)
 
     def _sample(self, last_logits):
         temps = np.zeros((self.econf.n_slots,), np.float32)

@@ -15,7 +15,22 @@ A per-slot block table (n_slots, max_blocks) maps logical block index ->
 physical pool block; unallocated entries hold the OOB sentinel `n_blocks`,
 so device-side writes through them are DROPPED by the scatter and gathers
 read zeros (`mode="fill"`). That single convention gives free write-masking
-for inactive slots and positions beyond a sequence's allocation.
+for inactive slots and positions beyond a sequence's allocation. (OOB-HIGH,
+never -1: negative scatter indices WRAP numpy-style — docs/CONVENTIONS.md.)
+
+With `n_shards > 1` the allocator is SLOT-AFFINE over a mesh "data" axis
+(serve/engine.py multi-host mode): slots and physical blocks are both split
+into `n_shards` contiguous ranges, and a slot only ever receives blocks
+homed on its own shard (per-shard free lists). Every device-side index a
+slot's table row can carry therefore resolves inside that slot's shard of
+the pool, which is what lets the engine run the decode step under a manual
+`shard_map` over "data" with NO cross-shard pool traffic — the gather /
+scatter that a generically data-sharded pool plus replicated table turns
+into a full pool all-gather per step (priced by launch/dryrun decode cells)
+stays shard-local. `table_device()` then emits SHARD-LOCAL physical indices
+(global id minus the slot's shard base; sentinel -> blocks_per_shard), so
+the same gather/scatter primitives work unchanged on the shard-local leaves
+shard_map hands them.
 
 The device-side primitives (`gather_view` / `scatter_tokens`) are called
 from the mixer decode paths (models/attention.py, models/mla.py); the
@@ -190,11 +205,18 @@ class KVPool:
     runs `_reclaim` before growing), keeping live blocks O(window) per slot;
     a truncate below the reclaim floor raises SlotError because the rolled-
     back window would need keys that no longer exist.
+
+    `n_shards > 1` makes allocation SLOT-AFFINE for mesh-sharded serving:
+    shard s owns slots [s*n_slots/S, (s+1)*n_slots/S) and physical blocks
+    [s*n_blocks/S, (s+1)*n_blocks/S), each shard runs its own free list, and
+    a slot allocates exclusively from its shard. Admission becomes per-shard
+    (`can_admit(..., slot=i)`) — one hot shard can be full while another has
+    room. Single-shard behavior (the default) is bit-for-bit unchanged.
     """
 
     def __init__(self, cfg: ArchConfig, n_slots: int, max_len: int, *,
                  paged: bool = True, block_size: int = 16,
-                 n_blocks: int | None = None, specs=None):
+                 n_blocks: int | None = None, specs=None, n_shards: int = 1):
         assert max_len % block_size == 0, \
             f"max_len {max_len} must be a multiple of block_size {block_size}"
         self.cfg = cfg
@@ -205,8 +227,16 @@ class KVPool:
         self.max_blocks = max_len // block_size
         if n_blocks is None:
             n_blocks = n_slots * self.max_blocks
+        if n_shards < 1 or n_slots % n_shards or n_blocks % n_shards:
+            raise ValueError(
+                f"n_shards={n_shards} must divide both n_slots={n_slots} and "
+                f"n_blocks={n_blocks} (equal shard extents are what keep the "
+                "shard_map slot split aligned with the block homes)")
         self.n_blocks = n_blocks
         self.sentinel = n_blocks
+        self.n_shards = n_shards
+        self.slots_per_shard = n_slots // n_shards
+        self.blocks_per_shard = n_blocks // n_shards
         self.specs = specs if specs is not None else lm.layer_specs(cfg)
         self.caches = init_cache(cfg, n_slots, max_len, paged=paged,
                                  n_blocks=n_blocks, block_size=block_size,
@@ -216,7 +246,12 @@ class KVPool:
             for pattern, _ in self.specs for mixer, ff in pattern)
         self._table = np.full((n_slots, self.max_blocks), self.sentinel,
                               np.int32)
-        self._free = list(range(n_blocks - 1, -1, -1))  # pop() -> block 0 first
+        # per-shard free lists; pop() -> the shard's lowest block id first
+        # (n_shards=1: one list over all blocks, the original behavior)
+        bps = self.blocks_per_shard
+        self._frees: list[list[int]] = [
+            list(range((s + 1) * bps - 1, s * bps - 1, -1))
+            for s in range(n_shards)]
         self._owned: list[list[int]] = [[] for _ in range(n_slots)]
         self._committed = [0] * n_slots  # reserved blocks per admitted seq
         self._bound = [False] * n_slots  # slot currently holds a sequence
@@ -233,9 +268,28 @@ class KVPool:
 
     # ---- block accounting ----
 
+    def shard_of_slot(self, slot: int) -> int:
+        """Mesh-"data" shard homing `slot` (contiguous split, matching how
+        shard_map splits the leading slot/block axes of the device arrays)."""
+        return slot // self.slots_per_shard
+
+    def shard_of_block(self, block: int) -> int:
+        return block // self.blocks_per_shard
+
+    @property
+    def _free(self) -> list[int]:
+        """Flat view of every free block (invariant checks / introspection).
+
+        Allocation goes through the per-shard `_frees` lists; this view keeps
+        single-shard callers and the property-test suite working unchanged."""
+        return [b for shard in self._frees for b in shard]
+
     @property
     def free_block_count(self) -> int:
-        return len(self._free)
+        return sum(len(shard) for shard in self._frees)
+
+    def free_blocks_in_shard(self, shard: int) -> int:
+        return len(self._frees[shard])
 
     def blocks_for(self, n_tokens: int) -> int:
         return math.ceil(n_tokens / self.block_size)
@@ -258,28 +312,50 @@ class KVPool:
 
     def can_ever_admit(self, total_tokens: int,
                        max_growth: int | None = None) -> bool:
-        """Is a sequence of total_tokens servable by this pool at all?"""
+        """Is a sequence of total_tokens servable by this pool at all?
+
+        Slot-affine pools bound a single sequence by ONE SHARD's blocks — a
+        slot can never borrow from another shard's free list."""
         if total_tokens > self.max_len:
             return False
         return (not self.paged) or (
-            self.max_live_blocks(total_tokens, max_growth) <= self.n_blocks)
+            self.max_live_blocks(total_tokens, max_growth)
+            <= self.blocks_per_shard)
 
-    def can_admit(self, total_tokens: int,
-                  max_growth: int | None = None) -> bool:
+    def can_admit(self, total_tokens: int, max_growth: int | None = None,
+                  slot: int | None = None) -> bool:
         """Admission check: can a sequence of total_tokens be fully served
         alongside every already-admitted sequence?
 
         Blocks are allocated lazily (`ensure`), so the check subtracts the
         outstanding COMMITMENTS of admitted sequences (reserved via
         `commit`, not yet allocated) — otherwise two growing sequences could
-        both pass admission and later exhaust the pool mid-decode."""
+        both pass admission and later exhaust the pool mid-decode. With
+        `n_shards > 1` pass the candidate `slot`: only its shard's free
+        blocks and commitments count (slot affinity makes shards independent
+        allocators)."""
         if total_tokens > self.max_len:
             return False
         if not self.paged:
             return True
-        outstanding = sum(c - len(o)
-                          for c, o in zip(self._committed, self._owned))
-        return (self.free_block_count - outstanding
+        if self.n_shards > 1 and slot is None:
+            # no target slot: "can ANY shard take it" — never whole-pool
+            # accounting, which would over-admit (global free blocks can
+            # span shards no single slot may draw from)
+            return any(self.can_admit(total_tokens, max_growth,
+                                      slot=sh * self.slots_per_shard)
+                       for sh in range(self.n_shards))
+        if self.n_shards == 1:
+            shard_slots = range(self.n_slots)
+            free = self.free_block_count
+        else:
+            sh = self.shard_of_slot(slot)
+            shard_slots = range(sh * self.slots_per_shard,
+                                (sh + 1) * self.slots_per_shard)
+            free = self.free_blocks_in_shard(sh)
+        outstanding = sum(self._committed[i] - len(self._owned[i])
+                          for i in shard_slots)
+        return (free - outstanding
                 >= self.max_live_blocks(total_tokens, max_growth))
 
     def commit(self, slot: int, total_tokens: int,
@@ -313,10 +389,14 @@ class KVPool:
                               f"{self.max_blocks}-entry block table")
         if self.window is not None:
             self._reclaim(slot)
+        free = self._frees[self.shard_of_slot(slot)]
         while self._alloc_upto[slot] < need:
-            if not self._free:
-                raise OutOfBlocks(f"slot {slot}: pool exhausted")
-            blk = self._free.pop()
+            if not free:
+                raise OutOfBlocks(
+                    f"slot {slot}: pool exhausted"
+                    + (f" (shard {self.shard_of_slot(slot)})"
+                       if self.n_shards > 1 else ""))
+            blk = free.pop()
             self._table[slot, self._alloc_upto[slot]] = blk
             owned.append(blk)
             self._alloc_upto[slot] += 1
@@ -343,7 +423,7 @@ class KVPool:
             blk = int(self._table[slot, j])
             self._table[slot, j] = self.sentinel
             self._owned[slot].remove(blk)
-            self._free.append(blk)
+            self._frees[self.shard_of_block(blk)].append(blk)
         self._live_from[slot] = first_live
         self._table_dev = None
         # freed keys end at first_live*BS - 1; a truncate to n keeps windows
@@ -387,7 +467,8 @@ class KVPool:
             return
         blocks = self._owned[slot]
         if blocks:
-            self._free.extend(reversed(blocks))
+            # slot affinity: every owned block homes on the slot's shard
+            self._frees[self.shard_of_slot(slot)].extend(reversed(blocks))
             self._owned[slot] = []
         if self._alloc_upto[slot]:
             self._table[slot, :] = self.sentinel
@@ -397,11 +478,26 @@ class KVPool:
         self._floor[slot] = 0
 
     def table_device(self):
-        """Device copy of the block table (None in dense mode)."""
+        """Device copy of the block table (None in dense mode).
+
+        Slot-affine pools emit SHARD-LOCAL physical indices: the decode step
+        runs under a manual shard_map over "data", so each shard's rows must
+        index its own (n_blocks/S)-block slice of the pool. Real entries
+        subtract the slot's shard base; sentinels map to the LOCAL sentinel
+        `blocks_per_shard` (still OOB-high for the local leaves — scatter
+        drops, gathers fill zeros, exactly as in the single-shard layout)."""
         if not self.paged:
             return None
         if self._table_dev is None:
-            self._table_dev = jnp.asarray(self._table)
+            if self.n_shards == 1:
+                self._table_dev = jnp.asarray(self._table)
+            else:
+                base = (np.arange(self.n_slots, dtype=np.int32)
+                        // self.slots_per_shard)[:, None] * self.blocks_per_shard
+                local = np.where(self._table == self.sentinel,
+                                 self.blocks_per_shard,
+                                 self._table - base).astype(np.int32)
+                self._table_dev = jnp.asarray(local)
         return self._table_dev
 
     # ---- slot state ----

@@ -78,3 +78,11 @@ def prequantize(params, cfg: ArchConfig, scheme: str):
     if cfg.quantize_lm_head and "head" in params:
         out["head"] = L.pack_weight(params["head"], kind)
     return out
+
+
+def prequantize_specs(param_specs, cfg: ArchConfig, scheme: str):
+    """Shape-struct image of `prequantize` (zero allocation): what the
+    packed serving params LOOK like, for mesh lowering / memory analysis —
+    launch/dryrun's sharded decode cells price the 4.5-bit weight residency
+    the serving engine actually deploys with."""
+    return jax.eval_shape(lambda p: prequantize(p, cfg, scheme), param_specs)

@@ -23,6 +23,31 @@ class SamplingParams:
     top_k: int = 0
 
 
+def _topk_mask(lf: jax.Array, top_k: jax.Array) -> jax.Array:
+    """Per-row top-k logit filter: entries below the k-th highest logit go to
+    -inf; k == 0 keeps everything. lf (B, V) fp32, top_k (B,) int32."""
+    b, v = lf.shape
+    srt = jnp.sort(lf, axis=-1)[:, ::-1]                     # descending
+    kidx = jnp.clip(jnp.where(top_k > 0, top_k, v) - 1, 0, v - 1)
+    thresh = jnp.take_along_axis(srt, kidx[:, None], axis=-1)
+    return jnp.where(lf >= thresh, lf, -jnp.inf)
+
+
+def sampling_probs(logits: jax.Array, temperature: jax.Array,
+                   top_k: jax.Array) -> jax.Array:
+    """The engine's per-token sampling DISTRIBUTION q (B, V): softmax of the
+    top-k-filtered logits at `temperature`. This is exactly the law the
+    Gumbel-max trick in `sample_tokens` draws from on stochastic rows, so
+    rejection-sampled speculation that preserves q token-by-token preserves
+    the engine's sampling semantics. Only meaningful for temperature > 0."""
+    lf = logits.astype(jnp.float32)
+    masked = _topk_mask(lf, jnp.broadcast_to(jnp.asarray(top_k, jnp.int32),
+                                             lf.shape[:1]))
+    t = jnp.maximum(jnp.broadcast_to(
+        jnp.asarray(temperature, jnp.float32), lf.shape[:1]), 1e-6)[:, None]
+    return jax.nn.softmax(masked / t, axis=-1)
+
+
 def sample_tokens(logits: jax.Array, temperature: jax.Array,
                   top_k: jax.Array, key: jax.Array) -> jax.Array:
     """logits (B, V) -> token ids (B,) under per-row sampling params.
@@ -31,12 +56,7 @@ def sample_tokens(logits: jax.Array, temperature: jax.Array,
     top_k (B,) int32: 0 => no filter; else keep the k highest-logit tokens.
     """
     lf = logits.astype(jnp.float32)
-    b, v = lf.shape
-    # per-row top-k threshold (k == 0 -> keep everything)
-    srt = jnp.sort(lf, axis=-1)[:, ::-1]                     # descending
-    kidx = jnp.clip(jnp.where(top_k > 0, top_k, v) - 1, 0, v - 1)
-    thresh = jnp.take_along_axis(srt, kidx[:, None], axis=-1)
-    masked = jnp.where(lf >= thresh, lf, -jnp.inf)
+    masked = _topk_mask(lf, top_k)
     g = jax.random.gumbel(key, lf.shape, jnp.float32)
     t = jnp.maximum(temperature, 1e-6)[:, None]
     stoch = masked / t + g
@@ -71,15 +91,52 @@ def accept_greedy(drafts, targets) -> int:
     return a
 
 
-def speculative_resample(draft_tokens, draft_logits, target_logits, key):
-    """Rejection-sampling hook for stochastic speculative decoding.
+def speculative_resample(draft_tokens, draft_logits, target_logits, key, *,
+                         temperature=1.0, top_k=0):
+    """Stochastic speculative acceptance: rejection-sample the drafts so the
+    emitted stream preserves the target distribution EXACTLY.
 
-    The standard scheme (accept d with prob min(1, p_target/p_draft), else
-    resample from the renormalized residual) preserves the target
-    distribution EXACTLY — and because this engine's forward is
-    deterministic given the per-request key, even the stochastic stream
-    would be reproducible. Not yet wired: the engine enforces greedy
-    sampling when spec_k > 0 and routes stochastic requests here."""
-    raise NotImplementedError(
-        "stochastic speculative acceptance is not implemented; use "
-        "temperature=0 (greedy) with spec_k > 0")
+    draft_tokens (K,) int32 — the proposals; draft_logits (K, V) the draft's
+    logits for them, or None for a DETERMINISTIC draft (the engine's greedy
+    truncated-stack proposals): a deterministic draft is a point mass, so
+    the scheme degenerates to "accept d_j with prob q_j(d_j), else resample
+    from q_j with d_j excluded" — still exactly q. target_logits (K+1, V) —
+    row j is the full model's logits for the position draft j fills (the
+    verify chunk's row layout); row K is the bonus position.
+
+    Per position j: accept d_j with prob min(1, q_j(d)/p_j(d)). The first
+    rejection at j emits one token from the renormalized residual
+    max(q_j - p_j, 0) and stops; K acceptances emit a bonus token from
+    q_K. Either way the round's tokens are distributed as the target model
+    sampling one token at a time (Leviathan et al.'s guarantee), and —
+    because q applies the SAME temperature/top-k transform as
+    `sample_tokens` — as THIS engine's sampler specifically.
+
+    Returns (tokens (K+1,) int32, count): tokens[:count] are the round's
+    emissions (count-1 accepted drafts + the resample/bonus token).
+    Deterministic given `key`, so stochastic streams are reproducible.
+    """
+    k = draft_tokens.shape[0]
+    v = target_logits.shape[-1]
+    q = sampling_probs(target_logits, temperature, top_k)      # (K+1, V)
+    if draft_logits is None:
+        p = jax.nn.one_hot(draft_tokens, v, dtype=jnp.float32)  # point mass
+    else:
+        p = sampling_probs(draft_logits, temperature, top_k)
+    k_acc, k_fin = jax.random.split(jax.random.fold_in(key, 0))
+    idx = jnp.arange(k)
+    qd = q[idx, draft_tokens]
+    pd = p[idx, draft_tokens]
+    u = jax.random.uniform(k_acc, (k,), jnp.float32)
+    accept = u * pd < qd                    # u < min(1, q/p), p-robust form
+    a = jnp.where(jnp.all(accept), k, jnp.argmin(accept))  # first rejection
+    # residual on rejection (guaranteed positive mass: rejection implies
+    # q(d) < p(d) <= 1); bonus distribution q_K when everything was accepted
+    resid = jnp.maximum(q[a] - p[a], 0.0)
+    zmass = jnp.sum(resid)
+    resid = resid / jnp.maximum(zmass, 1e-38)
+    final_p = jnp.where(a == k, q[k], jnp.where(zmass > 0, resid, q[a]))
+    final = jax.random.categorical(k_fin, jnp.log(final_p))
+    base = jnp.concatenate([draft_tokens, jnp.zeros((1,), jnp.int32)])
+    toks = jnp.where(jnp.arange(k + 1) == a, final, base).astype(jnp.int32)
+    return toks, (a + 1).astype(jnp.int32)

@@ -18,10 +18,13 @@ Round structure (all device calls batched over the fixed slot set):
   3. VERIFY     — one full-model chunk over [last_tok, d_1 .. d_K]; logits
                   at chunk index j are the model's prediction for position
                   pos+j+1, so target t_{j+1} = argmax(logits[:, j]).
-  4. ACCEPT     — greedy: keep the longest prefix with d_j == t_j, then emit
-                  one more model token for free (the correction / bonus).
-                  Stochastic acceptance is the rejection-sampling hook in
-                  serve/sampling.py, not yet wired.
+  4. ACCEPT     — greedy requests keep the longest prefix with d_j == t_j,
+                  then emit one more model token for free (the correction /
+                  bonus). Stochastic requests rejection-sample each draft
+                  against the verify chunk's target distribution
+                  (serve/sampling.py `speculative_resample`): the emitted
+                  tokens follow the target sampling law exactly, with
+                  per-(round, slot) keys keeping streams reproducible.
   5. ROLLBACK   — rejected positions are logically truncated: token caches
                   (kv / mla) need no physical undo (stale entries hide
                   behind the position mask until overwritten); recurrent
@@ -74,12 +77,30 @@ class DraftStack:
         self.specs = lm.prefix_specs(cfg, econf.draft_layers)  # validates
         self.paged_kernel = econf.resolved_paged_kernel()
         e = econf
+        self.mesh = e.mesh
+        shards = (dict(self.mesh.shape).get("data", 1)
+                  if self.mesh is not None else 1)
         self.pool = KVPool(cfg, e.n_slots, e.max_len, paged=e.paged,
                            block_size=e.block_size, n_blocks=e.n_blocks,
-                           specs=self.specs)
-        self.params = params
+                           specs=self.specs, n_shards=shards)
+        if self.mesh is not None:
+            from repro.dist import sharding as SH
+            self.pool.caches = jax.device_put(
+                self.pool.caches,
+                SH.serve_cache_shardings(self.pool.caches, self.mesh))
+        self.params = params  # engine-owned; already mesh-placed when sharded
+        from repro.serve.decode import _needs_unroll
+        self.unroll = self.mesh is not None and _needs_unroll(self.mesh)
         self._step_fns: dict[int, object] = {}
         self._propose_fns: dict[int, object] = {}
+
+    def _wrap(self, fn, *, out_batch_axis: int = 0):
+        """Mesh mode: the draft's steps run under the same manual-"data" /
+        auto-"model" shard_map as the engine's (serve/decode.py)."""
+        if self.mesh is None:
+            return fn
+        from repro.serve.decode import shard_serve_step
+        return shard_serve_step(fn, self.mesh, out_batch_axis=out_batch_axis)
 
     def propose(self, k: int, tok0, pos, active):
         """K greedy proposals in ONE device call.
@@ -93,7 +114,7 @@ class DraftStack:
         fn = self._propose_fns.get(k)
         if fn is None:
             cfg, scheme, npfx = self.cfg, self.econf.scheme, self.n_prefix
-            pk = self.paged_kernel
+            pk, unroll = self.paged_kernel, self.unroll
 
             def prop_fn(params, caches, table, tok0, pos, active):
                 def body(carry, t):
@@ -102,15 +123,20 @@ class DraftStack:
                         params, cfg, {"tokens": cur[:, None]}, scheme, _SEED,
                         n_prefix=npfx, caches=caches, mode="decode",
                         pos=pos + t, active=active, block_table=table,
-                        paged_kernel=pk)
+                        paged_kernel=pk, unroll_stages=unroll)
                     nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
                     return (caches, nxt), nxt
 
+                # the propose loop is itself a scan: unroll it too under a
+                # non-trivial auto axis (same while-body sharding limitation
+                # as the layer scan — see lm._run_stages)
                 (caches, _), toks = jax.lax.scan(
-                    body, (caches, tok0), jnp.arange(k))
+                    body, (caches, tok0), jnp.arange(k),
+                    unroll=k if unroll else 1)
                 return toks, caches
 
-            fn = self._propose_fns[k] = jax.jit(prop_fn, donate_argnums=(1,))
+            fn = self._propose_fns[k] = jax.jit(
+                self._wrap(prop_fn, out_batch_axis=1), donate_argnums=(1,))
         toks, self.pool.caches = fn(
             self.params, self.pool.caches, self.pool.table_device(),
             jnp.asarray(tok0, jnp.int32), jnp.asarray(pos),
@@ -121,16 +147,18 @@ class DraftStack:
         fn = self._step_fns.get(size)
         if fn is None:
             cfg, scheme, npfx = self.cfg, self.econf.scheme, self.n_prefix
-            pk = self.paged_kernel
+            pk, unroll = self.paged_kernel, self.unroll
 
             def step_fn(params, caches, table, tokens, pos, active):
                 logits, caches, _ = lm.forward_prefix(
                     params, cfg, {"tokens": tokens}, scheme, _SEED,
                     n_prefix=npfx, caches=caches, mode="decode", pos=pos,
-                    active=active, block_table=table, paged_kernel=pk)
+                    active=active, block_table=table, paged_kernel=pk,
+                    unroll_stages=unroll)
                 return logits, caches
 
-            fn = self._step_fns[size] = jax.jit(step_fn, donate_argnums=(1,))
+            fn = self._step_fns[size] = jax.jit(
+                self._wrap(step_fn), donate_argnums=(1,))
         logits, self.pool.caches = fn(
             self.params, self.pool.caches, self.pool.table_device(),
             jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(active))
@@ -193,7 +221,7 @@ def spec_round(eng, dec: list[int]) -> int:
     logits = eng._forward(K + 1, tokens, pos, active)
     targets = np.asarray(greedy_targets(logits))
 
-    # ---- 4. accept (greedy) + commit ------------------------------------
+    # ---- 4. accept (greedy or rejection-sampled) + commit ----------------
     emitted = 0
     reject_state: list[int] = []
     replay: dict[int, list[int]] = {}
@@ -201,8 +229,26 @@ def spec_round(eng, dec: list[int]) -> int:
     for i in dec:
         s = slots[i]
         length0 = s.length
-        a = accept_greedy(proposals[i], targets[i])
-        emit = [int(targets[i, j]) for j in range(a + 1)]
+        temp = s.req.sampling.temperature
+        if temp == 0.0:
+            a = accept_greedy(proposals[i], targets[i])
+            emit = [int(targets[i, j]) for j in range(a + 1)]
+        else:
+            # stochastic request: rejection-sample against the verify
+            # chunk's target distributions (greedy deterministic drafts =
+            # point-mass proposals; see sampling.speculative_resample).
+            # Token-by-token the emitted stream follows exactly the
+            # distribution the non-speculative sampler draws from, though
+            # the realized stream differs (different PRNG consumption).
+            toks, cnt = eng._resample(
+                jnp.asarray(proposals[i], jnp.int32),
+                logits[i].astype(jnp.float32), eng._spec_key(i),
+                temp, s.req.sampling.top_k)
+            cnt = int(cnt)
+            toks = np.asarray(toks)
+            emit = [int(toks[j]) for j in range(cnt)]
+            a = cnt - 1  # accepted drafts; the last emission is the
+            #              resample / bonus token
         remaining = s.req.max_new - len(s.generated)
         emit = emit[:remaining]
         nacc = len(emit)

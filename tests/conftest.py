@@ -7,6 +7,22 @@ sources. The `_hypothesis_compat` shim already seeds itself from the test's
 qualified name, so property tests reproduce too.
 """
 
+import os
+
+# Simulated 2-device host platform for the mesh-sharded serving suite
+# (tests/test_serve_sharded.py drives shard_map over a (data=2, model=1)
+# mesh in-process). MUST run before the first jax import anywhere — jax
+# locks the device count at first init; pytest imports conftest.py before
+# any test module, so this is the one reliable hook. Every other test is
+# device-count agnostic (unsharded computations land on device 0 and
+# produce bit-identical results), and the multi-device subprocess tests
+# (test_pipeline / test_substrate / test_dist) set their own flags.
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=2").strip()
+
 import jax
 import numpy as np
 import pytest
@@ -19,11 +35,18 @@ BASE_SEED = 0
 # on machines where it is slow) without per-file pytestmark boilerplate.
 _KERNEL_SUITES = {"test_kernels.py", "test_paged_attention.py"}
 
+# Distribution-layer suites (sharding rules, pipeline/compression shard_map
+# programs, the mesh-sharded serving engine): `-m dist` selects them, wired
+# by path like the kernel marker above.
+_DIST_SUITES = {"test_dist.py", "test_pipeline.py", "test_serve_sharded.py"}
+
 
 def pytest_collection_modifyitems(config, items):
     for item in items:
         if item.fspath.basename in _KERNEL_SUITES:
             item.add_marker(pytest.mark.kernels)
+        if item.fspath.basename in _DIST_SUITES:
+            item.add_marker(pytest.mark.dist)
 
 
 @pytest.fixture(scope="session")

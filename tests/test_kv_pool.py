@@ -398,3 +398,133 @@ def test_window_max_live_blocks_bound():
     assert pool.max_live_blocks(MAX_LEN) == MAX_BLOCKS
     # unwindowed pools ignore max_growth entirely
     assert _pool().max_live_blocks(MAX_LEN, 4) == MAX_BLOCKS
+
+
+# --------------------------------------------------------------------------
+# slot-affine sharded allocator (n_shards > 1 — the mesh-"data" split the
+# sharded serving engine runs its shard_map decode step over)
+# --------------------------------------------------------------------------
+
+S_SLOTS, S_SHARDS = 4, 2
+
+
+def _spool(n_blocks=12) -> KVPool:
+    return KVPool(_tiny_cfg(), S_SLOTS, MAX_LEN, paged=True,
+                  block_size=BLOCK, n_blocks=n_blocks, n_shards=S_SHARDS)
+
+
+def _check_affinity(pool: KVPool):
+    """The invariant the shard_map decode path rests on: a slot only ever
+    owns blocks homed on its own shard, free lists stay partitioned, and
+    the device table's real entries are local indices into the shard."""
+    bps = pool.blocks_per_shard
+    for s in range(pool.n_slots):
+        sh = pool.shard_of_slot(s)
+        assert all(b // bps == sh for b in pool._owned[s]), (s, pool._owned[s])
+    for sh, free in enumerate(pool._frees):
+        assert all(b // bps == sh for b in free), (sh, free)
+    # per-shard conservation (global conservation is the existing invariant)
+    for sh in range(pool.n_shards):
+        owned = sum(len(pool._owned[s])
+                    for s in range(pool.n_slots)
+                    if pool.shard_of_slot(s) == sh)
+        assert owned + pool.free_blocks_in_shard(sh) == bps
+    local = pool.table_device()
+    if local is not None:
+        import numpy as np
+        local = np.asarray(local)
+        assert local.min() >= 0 and local.max() <= bps  # bps = LOCAL sentinel
+
+
+def test_shard_divisibility_validated():
+    with pytest.raises(ValueError):
+        KVPool(_tiny_cfg(), 3, MAX_LEN, block_size=BLOCK, n_shards=2)
+    with pytest.raises(ValueError):
+        KVPool(_tiny_cfg(), 4, MAX_LEN, block_size=BLOCK, n_blocks=9,
+               n_shards=2)
+
+
+def test_shard_free_lists_partitioned_at_init():
+    pool = _spool()
+    assert pool.blocks_per_shard == 6
+    assert sorted(pool._frees[0]) == list(range(6))
+    assert sorted(pool._frees[1]) == list(range(6, 12))
+    assert pool.shard_of_slot(0) == pool.shard_of_slot(1) == 0
+    assert pool.shard_of_slot(2) == pool.shard_of_slot(3) == 1
+
+
+def test_shard_affinity_allocation_and_release():
+    pool = _spool()
+    for s in range(S_SLOTS):
+        pool.commit(s, 12)
+        pool.ensure(s, 12)  # 3 blocks each
+    _check_affinity(pool)
+    for s in (1, 2):
+        pool.release(s)
+    _check_affinity(pool)
+    # shard 0 slot regrows only from shard 0's returned blocks
+    pool.commit(1, 12)
+    pool.ensure(1, 12)
+    _check_affinity(pool)
+
+
+def test_shard_admission_is_per_shard():
+    pool = _spool()  # 6 blocks per shard
+    pool.commit(0, 24)      # reserves 6 of shard 0
+    assert not pool.can_admit(4, slot=1)     # shard 0 fully committed
+    assert pool.can_admit(4, slot=2)         # shard 1 untouched
+    # a single sequence is bounded by ONE shard, not the whole pool
+    assert pool.can_ever_admit(24)           # 6 blocks = blocks_per_shard
+    assert not pool.can_ever_admit(28)       # 7 > blocks_per_shard
+    # shard exhaustion raises even while the other shard has free blocks
+    pool.ensure(0, 24)
+    pool.commit(1, 4)
+    with pytest.raises(OutOfBlocks):
+        pool.ensure(1, 4)
+    assert pool.free_blocks_in_shard(1) == 6
+
+
+def test_shard_local_table_round_trip():
+    pool = _spool()
+    pool.commit(2, 8)
+    pool.ensure(2, 8)       # 2 blocks on shard 1
+    local = __import__("numpy").asarray(pool.table_device())
+    bps = pool.blocks_per_shard
+    assert list(local[2, :2]) == [0, 1]          # shard-local ids
+    assert (local[2, 2:] == bps).all()           # local sentinel
+    assert (local[[0, 1, 3]] == bps).all()       # unbound rows all sentinel
+    # local + shard base == canonical global table entry
+    assert list(pool._table[2, :2]) == [bps + 0, bps + 1]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_shard_affinity_random_walk(seed):
+    """Random commit/ensure/truncate/release walks never violate slot
+    affinity, per-shard conservation, or local-table bounds."""
+    rng = random.Random(seed)
+    pool = _spool(n_blocks=rng.choice([8, 12, S_SLOTS * MAX_BLOCKS]))
+    bound = [False] * S_SLOTS
+    length = [0] * S_SLOTS
+    for _ in range(60):
+        s = rng.randrange(S_SLOTS)
+        op = rng.choice(["commit", "ensure", "ensure", "truncate", "release"])
+        try:
+            if op == "commit" and not bound[s]:
+                pool.commit(s, rng.randint(1, MAX_LEN))
+                bound[s] = True
+            elif op == "ensure" and bound[s]:
+                n = rng.randint(1, MAX_LEN)
+                pool.ensure(s, n)
+                length[s] = max(length[s], n)
+            elif op == "truncate" and bound[s]:
+                n = rng.randint(0, length[s])
+                pool.truncate(s, n)
+                length[s] = n
+            elif op == "release" and bound[s]:
+                pool.release(s)
+                bound[s] = False
+                length[s] = 0
+        except OutOfBlocks:
+            pass
+        _check_affinity(pool)

@@ -1,0 +1,205 @@
+"""Mesh-sharded serving engine: bitwise stream parity + slot affinity.
+
+A simulated (data=2, model=1) mesh over two host-platform CPU devices
+(forced by tests/conftest.py BEFORE jax initializes) drives the engine's
+manual-"data" shard_map decode path:
+
+  - the sharded engine's emitted greedy streams must be BITWISE identical
+    to the single-host engine for gqa / mla / lattn, in both the paged-pool
+    and dense-cache layouts (the decode forward is row-local per slot, so
+    splitting the slot batch across shards must not change a single bit —
+    the contract docs/CONVENTIONS.md records);
+  - the slot-affine allocator must never hand a slot a block homed on
+    another shard, and the device table must carry shard-LOCAL indices;
+  - speculative decoding must compose with sharding (draft pool + propose
+    scan + verify chunk all run under the same shard_map specs).
+
+Parity runs under the `bf16` scheme: quantizing schemes share one
+activation absmax across the slot batch, so a data split changes the
+quantization grid (the same chunk-coupling already documented for
+spec_decode) — sharded quartet2 is still deterministic, just not
+bit-comparable to the single-host batch. serve/README.md "Multi-host
+serving" spells this out.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.launch.mesh import make_serve_mesh
+from repro.models import lm
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+pytestmark = pytest.mark.serve
+
+needs_two_devices = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="simulated mesh needs >= 2 host-platform devices "
+           "(tests/conftest.py forces 2; something overrode XLA_FLAGS)")
+
+
+def _gqa_cfg():
+    return registry.get("yi_9b").reduced()
+
+
+def _mla_cfg():
+    cfg = registry.get("deepseek_v3_671b").reduced()
+    # exactness needs no capacity drops (cf. test_serve._cfg)
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+
+
+def _lattn_cfg():
+    base = registry.get("recurrentgemma_9b").reduced()
+    return dataclasses.replace(
+        base, griffin=dataclasses.replace(base.griffin, window=8,
+                                          pattern=("attn", "attn")))
+
+
+_CFGS = {"gqa": _gqa_cfg, "mla": _mla_cfg, "lattn": _lattn_cfg}
+
+
+def _prompts(cfg, lens=(9, 13)):
+    rng = np.random.RandomState(1)
+    return [list(map(int, rng.randint(0, cfg.vocab, n))) for n in lens]
+
+
+def _streams(cfg, params, prompts, max_new=5, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("scheme", "bf16")
+    kw.setdefault("prequant", False)
+    eng = ServeEngine(cfg, params, EngineConfig(**kw))
+    ids = [eng.submit(Request(prompt=p, max_new=max_new)) for p in prompts]
+    res = {r.req_id: r.tokens for r in eng.run()}
+    return [res[i] for i in ids], eng
+
+
+@needs_two_devices
+@pytest.mark.parametrize("arch", ["gqa", "mla", "lattn"])
+def test_sharded_streams_bitwise_identical(arch):
+    """data=2 mesh split of the slot batch reproduces the single-host greedy
+    streams bit-for-bit — paged AND dense layouts (acceptance criterion)."""
+    cfg = _CFGS[arch]()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg)
+    single, _ = _streams(cfg, params, prompts, paged=True)
+    mesh = make_serve_mesh(2, 1)
+    for paged in (True, False):
+        sharded, eng = _streams(cfg, params, prompts, paged=paged, mesh=mesh)
+        assert sharded == single, (arch, paged)
+        assert eng.data_shards == 2
+
+
+@needs_two_devices
+def test_sharded_spec_stream_bitwise_identical():
+    """Speculative decoding under the mesh: sharded draft propose + verify
+    chunk emit exactly the single-host non-speculative greedy stream."""
+    cfg = _gqa_cfg()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg)
+    single, _ = _streams(cfg, params, prompts)
+    mesh = make_serve_mesh(2, 1)
+    sharded, eng = _streams(cfg, params, prompts, mesh=mesh,
+                            spec_k=2, draft_layers=1)
+    assert sharded == single
+    assert eng.stats["spec_rounds"] > 0
+
+
+@needs_two_devices
+def test_sharded_slot_affinity_and_reclamation():
+    """Slots cycle through more requests than slots; afterwards every shard's
+    free list is fully restored (per-shard conservation), and while bound no
+    slot ever referenced a block outside its shard (checked via the table
+    history the device step consumed)."""
+    cfg = _gqa_cfg()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    mesh = make_serve_mesh(2, 1)
+    eng = ServeEngine(cfg, params, EngineConfig(
+        n_slots=2, max_len=64, prefill_chunk=8, scheme="bf16",
+        prequant=False, mesh=mesh))
+    pool = eng.pool
+    per_shard0 = [pool.free_blocks_in_shard(s) for s in range(2)]
+
+    tables = []
+    orig = eng._forward
+
+    def spy(size, tokens, pos, active):
+        tables.append(np.array(pool._table))
+        return orig(size, tokens, pos, active)
+
+    eng._forward = spy
+    prompts = _prompts(cfg, lens=(9, 13, 7, 11, 5))
+    for p in prompts:
+        eng.submit(Request(prompt=p, max_new=3))
+    results = eng.run()
+    assert len(results) == 5
+    bps = pool.blocks_per_shard
+    for table in tables:
+        for slot in range(pool.n_slots):
+            sh = pool.shard_of_slot(slot)
+            real = table[slot][table[slot] != pool.sentinel]
+            assert np.all(real // bps == sh), (slot, sh, real)
+    assert [pool.free_blocks_in_shard(s) for s in range(2)] == per_shard0
+
+
+@needs_two_devices
+def test_sharded_local_table_indices():
+    """table_device() under n_shards=2 carries shard-local physical indices
+    with the LOCAL sentinel blocks_per_shard — never a global id."""
+    cfg = _gqa_cfg()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    mesh = make_serve_mesh(2, 1)
+    eng = ServeEngine(cfg, params, EngineConfig(
+        n_slots=2, max_len=64, prefill_chunk=8, scheme="bf16",
+        prequant=False, mesh=mesh))
+    pool = eng.pool
+    for slot in range(2):
+        pool.reset_slot(slot)
+        pool.commit(slot, 20)
+        pool.ensure(slot, 20)
+    local = np.asarray(pool.table_device())
+    bps = pool.blocks_per_shard
+    assert local.max() <= bps
+    for slot in range(2):
+        n = pool.blocks_for(20)
+        assert np.all(local[slot, :n] < bps)          # real: local range
+        assert np.all(local[slot, n:] == bps)         # rest: LOCAL sentinel
+        # local + shard base reproduces the canonical global table
+        base = pool.shard_of_slot(slot) * bps
+        np.testing.assert_array_equal(local[slot, :n] + base,
+                                      pool._table[slot, :n])
+
+
+@needs_two_devices
+def test_sharded_engine_validates_divisibility():
+    cfg = _gqa_cfg()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    mesh = make_serve_mesh(2, 1)
+    with pytest.raises(ValueError, match="n_slots"):
+        ServeEngine(cfg, params, EngineConfig(n_slots=3, mesh=mesh,
+                                              scheme="bf16", prequant=False))
+    with pytest.raises(ValueError, match="n_shards"):
+        ServeEngine(cfg, params, EngineConfig(n_slots=2, max_len=64,
+                                              n_blocks=7, mesh=mesh,
+                                              scheme="bf16", prequant=False))
+
+
+@needs_two_devices
+def test_sharded_quartet2_deterministic():
+    """Quantizing schemes are NOT bit-comparable across the data split (the
+    activation absmax is shared per shard-batch, not per global batch), but
+    the sharded engine must still be deterministic run-to-run."""
+    cfg = _gqa_cfg()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg)
+    mesh = make_serve_mesh(2, 1)
+    a, _ = _streams(cfg, params, prompts, mesh=mesh, scheme="quartet2",
+                    prequant=True)
+    b, _ = _streams(cfg, params, prompts, mesh=mesh, scheme="quartet2",
+                    prequant=True)
+    assert a == b

@@ -9,8 +9,12 @@ Acceptance (ISSUE 2):
   (b) quartet2 speculative streams are deterministic run-to-run, and the
       quantize-once packed draft weights are bit-identical to re-quantizing;
   (c) rollback bookkeeping: slots/blocks reclaimed across retirement and
-      re-admission, admission margin enforced, stochastic requests routed
-      to the (stubbed) rejection-sampling hook.
+      re-admission, admission margin enforced;
+  (d) stochastic requests speculate through the rejection-sampling hook
+      (sampling.speculative_resample): token-by-token the emitted stream
+      preserves the engine's sampling distribution EXACTLY (TV-distance
+      test against the analytic target), streams are reproducible, and
+      greedy rows in a mixed batch stay bitwise unperturbed.
 """
 
 import dataclasses
@@ -154,22 +158,78 @@ def test_spec_config_validation(base_key):
                     EngineConfig(spec_k=rcfg.rwkv.chunk - 1, draft_layers=1))
 
 
-def test_spec_rejects_stochastic_requests(base_key):
+def test_resample_preserves_target_distribution():
+    """The distribution-preservation guarantee of rejection sampling: with a
+    deterministic (point-mass) draft, the marginal of the FIRST emitted
+    token equals q_0 = softmax(logits_0 / T) exactly, and — conditioned on
+    the first draft being accepted — the second emission follows q_1. TV
+    distances against the analytic law must sit at sampling-noise level."""
+    v, draws = 8, 20_000
+    rng = np.random.RandomState(0)
+    tl = jnp.asarray(rng.randn(3, v) * 2, jnp.float32)   # K=2 drafts + bonus
+    temp = 0.8
+    q = np.asarray(sampling.sampling_probs(tl, temp, 0))
+    draft = jnp.asarray([3, 5], jnp.int32)
+    f = jax.jit(jax.vmap(lambda k: sampling.speculative_resample(
+        draft, None, tl, k, temperature=temp, top_k=0)))
+    toks, cnt = f(jax.random.split(jax.random.PRNGKey(1), draws))
+    toks, cnt = np.asarray(toks), np.asarray(cnt)
+    emp = np.bincount(toks[:, 0], minlength=v) / draws
+    assert 0.5 * np.abs(emp - q[0]).sum() < 0.02
+    m = (cnt >= 2) & (toks[:, 0] == 3)                   # draft 0 accepted
+    emp2 = np.bincount(toks[m, 1], minlength=v) / m.sum()
+    assert 0.5 * np.abs(emp2 - q[1]).sum() < 0.03
+
+
+def test_resample_general_draft_distribution():
+    """With a non-degenerate draft distribution p (draft token SAMPLED from
+    p, accept w.p. min(1, q/p), residual max(q-p, 0)), the emitted marginal
+    is still exactly q — including under a top-k filter."""
+    v, draws, temp, topk = 8, 20_000, 1.2, 5
+    rng = np.random.RandomState(2)
+    tl = jnp.asarray(rng.randn(2, v), jnp.float32)       # K=1 draft + bonus
+    dl = jnp.asarray(rng.randn(1, v), jnp.float32)       # draft logits
+    q = np.asarray(sampling.sampling_probs(tl, temp, topk))
+    p = sampling.sampling_probs(dl, temp, topk)
+
+    def one(k):
+        kd, kr = jax.random.split(k)
+        d = jax.random.categorical(kd, jnp.log(p))        # d ~ p
+        return sampling.speculative_resample(
+            d.astype(jnp.int32), dl, tl, kr, temperature=temp, top_k=topk)
+
+    toks, _ = jax.jit(jax.vmap(one))(
+        jax.random.split(jax.random.PRNGKey(3), draws))
+    emp = np.bincount(np.asarray(toks)[:, 0], minlength=v) / draws
+    assert 0.5 * np.abs(emp - q[0]).sum() < 0.02
+
+
+def test_spec_serves_stochastic_requests(base_key, np_rng):
+    """End-to-end: stochastic requests speculate (no refusal), produce full
+    streams, reproduce run-to-run, and do NOT perturb a greedy neighbor —
+    the greedy slot's stream stays bitwise equal to an all-greedy engine."""
     from repro.serve.sampling import SamplingParams
     cfg = _cfg("yi_9b")
     params = lm.init(cfg, base_key)
-    eng = ServeEngine(cfg, params,
-                      EngineConfig(n_slots=1, max_len=32, scheme="bf16",
-                                   prequant=False, spec_k=2, draft_layers=1))
-    with pytest.raises(NotImplementedError):
-        eng.submit(Request(prompt=[1, 2, 3], max_new=2,
-                           sampling=SamplingParams(temperature=0.7)))
-    # temperature 0 is greedy no matter the top_k (sampler ignores the
-    # filter on greedy rows): the spec engine must serve it
-    eng.submit(Request(prompt=[1, 2, 3], max_new=2,
-                       sampling=SamplingParams(temperature=0.0, top_k=5)))
-    with pytest.raises(NotImplementedError):  # the hook itself is a stub
-        sampling.speculative_resample(None, None, None, None)
+    prompts = _prompts(cfg, np_rng)
+    greedy_only, _ = _run(cfg, params, prompts, 6, spec_k=2, draft_layers=1)
+
+    def mixed():
+        eng = ServeEngine(cfg, params,
+                          EngineConfig(n_slots=2, max_len=64, prefill_chunk=8,
+                                       scheme="bf16", prequant=False,
+                                       spec_k=2, draft_layers=1))
+        ids = [eng.submit(Request(prompt=prompts[0], max_new=6)),
+               eng.submit(Request(prompt=prompts[1], max_new=6,
+                                  sampling=SamplingParams(temperature=0.9,
+                                                          top_k=4)))]
+        res = {r.req_id: r.tokens for r in eng.run()}
+        return [res[i] for i in ids]
+
+    a, b = mixed(), mixed()
+    assert a == b                        # reproducible stochastic stream
+    assert len(a[1]) == 6
+    assert a[0] == greedy_only[0]        # greedy row bitwise unperturbed
 
 
 def test_accept_greedy_prefix_semantics():
