@@ -23,6 +23,18 @@ Rows (tok/s = generated tokens per wall-second of decode):
                              Pallas kernel (kernels/paged_attention.py;
                              interpret mode on CPU, so wall time here is NOT
                              the story — the modeled bytes/token column is)
+  serve/decode_prefix_cold — shared-system-prompt workload, prefix cache ON
+                             but EMPTY (first wave): prices the cache's
+                             bookkeeping overhead on a miss-only run
+  serve/decode_prefix_hot  — same workload, cache PRIMED: every request
+                             aliases the cached prompt blocks read-only and
+                             skips that prefill (reports tokens skipped and
+                             hit rate) — the prefix-sharing win
+  serve/latency_deadline   — mixed-priority Poisson-less batch under
+                             scheduler.LatencyPolicy with per-request
+                             deadlines: reports p50/p99 request latency and
+                             the deadline-met fraction (BENCH_serve.json
+                             carries the distribution for regression)
   serve/decode_sharded     — the mesh-sharded engine (EngineConfig.mesh):
                              slot-affine pool + shard_map decode over a
                              simulated (data=2, model=1) host-platform mesh
@@ -219,6 +231,91 @@ def _sharded_decode_row(cfg, params, prompts, max_new, scheme, detail,
             + (f" delta_vs_gather={tps / base:.2f}x" if base else ""))
 
 
+def _prefix_cache_rows(cfg, params, scheme, detail, smoke):
+    """serve/decode_prefix_{cold,hot}: a shared-system-prompt fleet through
+    the radix prefix cache. Cold = cache on but empty (miss-only overhead);
+    hot = cache primed by the cold wave on the SAME engine, so every
+    request aliases the cached prompt and skips its prefill. The prefill
+    seconds-per-request delta is the headline; BENCH_serve.json keeps the
+    skip/hit accounting."""
+    n_req = 4 if smoke else 8
+    prompt_len, suffix, max_new = (32, 4, 4) if smoke else (48, 4, 8)
+    rng = np.random.RandomState(11)
+    system = list(map(int, rng.randint(0, cfg.vocab, prompt_len)))
+    prompts = [system + list(map(int, rng.randint(0, cfg.vocab, suffix)))
+               for _ in range(n_req)]
+    econf = EngineConfig(n_slots=4, max_len=128, prefill_chunk=16,
+                         paged=True, prequant=True, scheme=scheme,
+                         prefix_cache=True)
+    eng = ServeEngine(cfg, params, econf)
+    _warm_and_reset(eng, prompts[0][:16], 2)
+    if eng.cache is not None:  # drop warmup entries: a true cold wave
+        eng.cache.evict(None, eng.cache.cached_blocks())
+        for k in eng.cache.stats:
+            eng.cache.stats[k] = 0
+        for k in eng.stats:
+            eng.stats[k] = 0 if isinstance(eng.stats[k], int) else 0.0
+    rows = []
+    for phase in ("cold", "hot"):
+        for p in prompts:
+            eng.submit(Request(prompt=p, max_new=max_new))
+        eng.run()
+        st = eng.stats
+        prefill_us = st["prefill_s"] * 1e6 / n_req
+        rows.append((f"serve/decode_prefix_{phase}", prefill_us,
+                     f"prefill_tokens={st['prefill_tokens']} "
+                     f"skipped={st['prefill_skipped_tokens']} "
+                     f"hits={st['prefix_hits']}"))
+        detail[f"prefix_{phase}"] = {
+            "prefill_us_per_req": round(prefill_us, 1),
+            "prefill_tokens": st["prefill_tokens"],
+            "skipped_tokens": st["prefill_skipped_tokens"],
+            "prefix_hits": st["prefix_hits"],
+            "cache": dict(eng.cache.stats) if eng.cache else None,
+        }
+        for k in eng.stats:  # hot wave measured from zero
+            eng.stats[k] = 0 if isinstance(eng.stats[k], int) else 0.0
+        if eng.cache is not None:  # per-phase hit rates, not cumulative
+            for k in eng.cache.stats:
+                eng.cache.stats[k] = 0
+    return rows
+
+
+def _latency_policy_row(cfg, params, scheme, detail, smoke):
+    """serve/latency_deadline: a saturated mixed-priority batch under
+    LatencyPolicy — p50/p99 completion latency and the fraction of
+    deadline-carrying requests that met their deadline."""
+    from repro.serve.scheduler import LatencyPolicy
+    n_req = 6 if smoke else 16
+    max_new = 4 if smoke else 8
+    prompts = _workload(cfg, n_req, prompt_len=16, seed=13)
+    econf = EngineConfig(n_slots=2, max_len=64, prefill_chunk=16,
+                         paged=True, prequant=True, scheme=scheme,
+                         scheduler=LatencyPolicy(aging_ticks=8))
+    eng = ServeEngine(cfg, params, econf)
+    _warm_and_reset(eng, prompts[0], 2)
+    for i, p in enumerate(prompts):
+        # every 3rd request is latency-critical with a deadline
+        crit = i % 3 == 0
+        eng.submit(Request(prompt=p, max_new=max_new,
+                           priority=5 if crit else 0,
+                           deadline_s=2.0 if crit else None))
+    results = eng.run()
+    lats = sorted(r.latency_s for r in results)
+    p50 = lats[len(lats) // 2]
+    p99 = lats[min(len(lats) - 1, int(len(lats) * 0.99))]
+    with_dl = [r for r in results if r.deadline_s is not None]
+    met = sum(1 for r in with_dl if r.deadline_met) / max(len(with_dl), 1)
+    detail["latency_deadline"] = {
+        "p50_ms": round(p50 * 1e3, 2), "p99_ms": round(p99 * 1e3, 2),
+        "deadline_met_frac": round(met, 3), "requests": n_req,
+        "critical": len(with_dl), "policy": "LatencyPolicy(aging_ticks=8)",
+    }
+    return ("serve/latency_deadline", p50 * 1e6,
+            f"p50_ms={p50*1e3:.1f} p99_ms={p99*1e3:.1f} "
+            f"deadline_met={met:.2f} requests={n_req}")
+
+
 def _emit_bench_json(decode_paths, rows, smoke):
     """BENCH_serve.json at the repo root: the serving bench trajectory
     artifact future PRs regress against."""
@@ -312,6 +409,11 @@ def run(quick: bool = True):
     dp_rows, dp_detail = _decode_path_rows(cfg, params, prompts, dp_new,
                                            scheme)
     rows.extend(dp_rows)
+
+    # --- prefix cache (cold vs hot wave) + latency-aware scheduling; both
+    # run under --smoke so CI exercises the radix cache and LatencyPolicy --
+    rows.extend(_prefix_cache_rows(cfg, params, scheme, dp_detail, smoke))
+    rows.append(_latency_policy_row(cfg, params, scheme, dp_detail, smoke))
 
     # --- self-speculative decoding (needs >= 2 layers for a prefix draft) ---
     spec_cfg = (bench_cfg(d_model=128, n_layers=2, vocab=256, d_ff=256)

@@ -265,15 +265,20 @@ def gqa_decode(p, x, cfg, scheme, seed, layer, cache_kv, pos, *, window=None,
         valid &= active[:, None]
     if block_table is not None:
         from repro.serve import kv_pool as KV
-        kc = KV.scatter_tokens(kc, block_table, positions, k, valid)
-        vc = KV.scatter_tokens(vc, block_table, positions, v, valid)
+        # reads resolve through the READ table; scatters go through the
+        # WRITE view, whose prefix-cache-aliased entries hold the sentinel —
+        # shared blocks are provably never written (docs/CONVENTIONS.md §5).
+        # A plain (B, MAXB) table is its own write view.
+        rt, wt = KV.split_tables(block_table)
+        kc = KV.scatter_tokens(kc, wt, positions, k, valid)
+        vc = KV.scatter_tokens(vc, wt, positions, v, valid)
         if paged_kernel:
             from repro.kernels import ops as KOPS
-            o = KOPS.paged_attention(q, kc, vc, block_table, posb,
+            o = KOPS.paged_attention(q, kc, vc, rt, posb,
                                      window=window)
         else:
-            o = decode_sdpa(q, KV.gather_view(kc, block_table),
-                            KV.gather_view(vc, block_table), posb,
+            o = decode_sdpa(q, KV.gather_view(kc, rt),
+                            KV.gather_view(vc, rt), posb,
                             window=window)
     else:
         cap = kc.shape[1]

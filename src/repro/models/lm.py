@@ -439,7 +439,9 @@ def forward(params, cfg: ArchConfig, inputs, scheme: str, seed: jax.Array,
     Decode mode serves ragged batches: `pos` may be a scalar (uniform batch,
     legacy) or a per-sequence (B,) vector; S >= 1 tokens are consumed per row
     (S > 1 = chunked prefill into the cache). `active` (B,) gates cache
-    writes per row; `block_table` (B, MAXB) switches kv/mla cache leaves to
+    writes per row; `block_table` — (B, MAXB), or (B, 2, MAXB) stacking a
+    read table and a write-masked table (prefix-cache aliasing;
+    kv_pool.split_tables) — switches kv/mla cache leaves to
     the paged pool layout (see serve/kv_pool.py); `paged_kernel` attends
     through the block-table flash-decode Pallas kernel instead of gathered
     views (kernels/paged_attention.py — requires block_table)."""

@@ -116,16 +116,19 @@ def mla_decode(p, x, cfg, scheme, seed, layer, cache, pos, *, active=None,
 
     if block_table is not None:
         from repro.serve import kv_pool as KV
-        cc = KV.scatter_tokens(cc, block_table, positions, c_new, valid)
-        kc = KV.scatter_tokens(kc, block_table, positions, kr2, valid)
+        # read table for gathers/kernel, write view (aliased prefix entries
+        # -> sentinel) for scatters — see gqa_decode / CONVENTIONS.md §5
+        rt, wt = KV.split_tables(block_table)
+        cc = KV.scatter_tokens(cc, wt, positions, c_new, valid)
+        kc = KV.scatter_tokens(kc, wt, positions, kr2, valid)
         if paged_kernel:
             from repro.kernels import ops as KOPS
             o_lat = KOPS.paged_mla_attention(q_abs, q_rope, cc, kc,
-                                             block_table, posb, qk_dim=qk_dim)
+                                             rt, posb, qk_dim=qk_dim)
             cv = None
         else:
-            cv = KV.gather_view(cc, block_table)
-            kv = KV.gather_view(kc, block_table)
+            cv = KV.gather_view(cc, rt)
+            kv = KV.gather_view(kc, rt)
     else:
         idx = jnp.where(valid, positions, cc.shape[1])  # OOB => write dropped
         bi = jnp.arange(b)[:, None]

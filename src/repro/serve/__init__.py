@@ -4,10 +4,18 @@ Modules (import them directly; this package init stays import-free so the
 model code can reach `repro.serve.kv_pool` without cycles):
 
     engine      — ServeEngine: continuous batching, admission control, slots;
-                  EngineConfig.mesh switches on mesh-sharded multi-host mode
+                  EngineConfig.mesh switches on mesh-sharded multi-host
+                  mode, .prefix_cache on prompt-prefix sharing, .scheduler
+                  swaps the admission/prefill policy
     kv_pool     — block-based paged KV pool + per-sequence block tables,
+                  refcounted blocks with adopt_prefix / cow_block aliasing,
                   truncate/rollback API, recurrent-state snapshots,
                   slot-affine sharded allocation (n_shards)
+    prefix_cache — radix-tree prompt-prefix cache: refcounted block reuse,
+                  COW at the divergence, LRU eviction under pool pressure
+    scheduler   — pluggable admission/prefill policies: FifoPolicy (exact
+                  legacy behavior) and latency-aware LatencyPolicy
+                  (priority, deadlines, starvation-free aging)
     spec_decode — self-speculative draft/verify loop (truncated-stack draft,
                   exact bitwise greedy verification, rejection-sampled
                   stochastic acceptance)

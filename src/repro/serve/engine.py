@@ -4,10 +4,16 @@ The engine owns a fixed set of decode SLOTS (the batch dimension of every
 jitted step), a request queue with admission control, a paged KV pool, and a
 quantize-once weight cache. The scheduler loop interleaves:
 
-  1. ADMIT   — move queued requests into free slots (admission checks the
-               pool can back prompt + max_new tokens before accepting).
+  1. ADMIT   — move queued requests into free slots in the order the
+               scheduler POLICY dictates (serve/scheduler.py; the default
+               FifoPolicy is exactly the original FIFO). Admission checks
+               the pool can back prompt + max_new tokens; placement is
+               shard-occupancy-aware, and with the prefix cache enabled
+               (serve/prefix_cache.py) the longest cached prompt prefix is
+               aliased read-only into the slot — its prefill is skipped.
   2. PREFILL — one chunk of ONE prefilling slot per iteration (bounded work
-               per tick keeps decode latency flat while prompts stream in).
+               per tick keeps decode latency flat while prompts stream in);
+               the policy picks WHICH slot (latency preemption point).
                Chunks run through the same decode-mode forward as decoding
                (S=chunk tokens, per-sequence start position); other slots are
                masked inactive, so their caches are untouched bit-for-bit.
@@ -58,7 +64,13 @@ class Request:
     max_new: int
     sampling: SamplingParams = field(default_factory=SamplingParams)
     req_id: int = -1  # assigned by submit()
-    arrival_s: float = 0.0
+    arrival_s: float = 0.0        # stamped by submit()
+    # latency-aware scheduling (serve/scheduler.py LatencyPolicy; the
+    # default FifoPolicy ignores all of these)
+    priority: int = 0             # higher = more urgent
+    deadline_s: float | None = None  # seconds after arrival
+    queued_ticks: int = 0         # scheduler aging counter (engine-owned)
+    cached_hint: int = 0          # prefix-cache matched tokens (engine-owned)
 
 
 @dataclass
@@ -66,6 +78,19 @@ class RequestResult:
     req_id: int
     prompt: list[int]
     tokens: list[int]
+    arrival_s: float = 0.0
+    finish_s: float = 0.0
+    deadline_s: float | None = None
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+    @property
+    def deadline_met(self) -> bool | None:
+        if self.deadline_s is None:
+            return None
+        return self.latency_s <= self.deadline_s
 
 
 @dataclass(frozen=True)
@@ -97,6 +122,17 @@ class EngineConfig:
     # "model" (GSPMD auto). None = single-host (all steps unwrapped).
     # Requires n_slots and the pool's n_blocks divisible by the "data" size.
     mesh: Any = None
+    # radix-tree prefix cache (serve/prefix_cache.py): retired sequences'
+    # blocks stay cached; a new request aliases its longest cached prefix
+    # read-only (COW at the divergence) and skips that prefill entirely.
+    # Silently inactive where sharing is unsound — dense caches, sliding-
+    # window (pure-lattn) pools, recurrent-state archs; `engine.cache` is
+    # None there.
+    prefix_cache: bool = False
+    # scheduler policy object (serve/scheduler.py). None -> FifoPolicy,
+    # which reproduces the pre-policy engine exactly; LatencyPolicy adds
+    # priority/deadline admission, prefill preemption, and aging.
+    scheduler: Any = None
 
     def resolved_paged_kernel(self) -> bool:
         if self.paged_kernel is None:
@@ -113,6 +149,10 @@ class _Slot:
     last_tok: int = 0
     generated: list[int] = field(default_factory=list)
     draft_len: int = 0            # tokens the spec draft has consumed
+    prefix_len: int = 0           # prompt tokens adopted from the prefix
+    #                               cache (cursor starts here; their prefill
+    #                               is skipped)
+    cache_nodes: list = field(default_factory=list)  # pinned radix nodes
 
 
 class ServeEngine:
@@ -190,12 +230,26 @@ class ServeEngine:
         self._sampler = jax.jit(sample_tokens)
         self._key = jax.random.PRNGKey(e.base_seed)
         self._tick = 0
+        # radix prefix cache: only where sharing is exact (paged layout, no
+        # sliding-window reclamation, no recurrent state) — excluded
+        # configurations run with cache=None, bit-identically to
+        # prefix_cache=False (serve/prefix_cache.py module docstring)
+        self.cache = None
+        self._matches: dict[int, tuple[int, Any]] = {}  # req_id -> (epoch, Match)
+        if e.prefix_cache:
+            from repro.serve.prefix_cache import PrefixCache
+            if PrefixCache.supported(self.pool):
+                self.cache = PrefixCache(self.pool)
+        from repro.serve.scheduler import FifoPolicy
+        self.sched = e.scheduler if e.scheduler is not None else FifoPolicy()
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0,
                       "prefill_tokens": 0, "decode_tokens": 0,
                       "decode_steps": 0, "ticks": 0,
                       "admitted": 0, "rejected": 0, "finished": 0,
                       "spec_rounds": 0, "draft_tokens": 0,
-                      "accepted_tokens": 0}
+                      "accepted_tokens": 0,
+                      "prefill_steps": 0, "prefill_skipped_tokens": 0,
+                      "prefix_hits": 0}
 
     # ------------------------------------------------------------------
     # public API
@@ -221,6 +275,7 @@ class ServeEngine:
                 f"blocks) but the pool serves at most "
                 f"max_len={self.econf.max_len} / {bound}")
         request.req_id = next(self._ids)
+        request.arrival_s = time.perf_counter()
         self.queue.append(request)
         return request.req_id
 
@@ -251,70 +306,222 @@ class ServeEngine:
         return finished
 
     def _admit(self) -> None:
-        while self.queue:
-            req = self.queue[0]
-            total = len(req.prompt) + req.max_new + self._margin
-            # FIFO head request -> the first FREE slot whose SHARD can back
-            # it (slot-affine pools admit per shard; single-host pools
-            # ignore the slot argument, preserving the original behavior)
-            target = next(
-                (i for i, s in enumerate(self.slots)
-                 if s.state == FREE
-                 and self.pool.can_admit(total, self._max_growth, slot=i)
-                 and (self.draft is None
-                      or self.draft.pool.can_admit(total, self._max_growth,
-                                                   slot=i))),
-                None)
-            if target is None:
-                break  # FIFO: don't starve the head request
-            i = target
-            self.queue.popleft()
-            self.pool.reset_slot(i)
-            self.pool.commit(i, total, self._max_growth)
-            if self.draft is not None:
-                self.draft.pool.reset_slot(i)
-                self.draft.pool.commit(i, total, self._max_growth)
-            self.slots[i] = _Slot(state=PREFILL, req=req)
-            self.stats["admitted"] += 1
+        for r in self.queue:
+            r.queued_ticks += 1  # scheduler aging (LatencyPolicy)
+        if not self.queue:
+            return
+        now = time.perf_counter()
+        if self.cache is not None and not self.sched.head_of_line:
+            # cache-aware admission ordering: a large cached prefix makes a
+            # request cheap to admit (its prefill is mostly skipped).
+            # Matches are memoized per request against the cache EPOCH
+            # (prompts are immutable; the tree only changes on
+            # insert/evict), so a deferred request costs one radix walk per
+            # tree change, not one per tick
+            for r in self.queue:
+                r.cached_hint = self._match(r).tokens
+        while self.queue and any(s.state == FREE for s in self.slots):
+            admitted = False
+            for req in self.sched.admission_order(self.queue, now):
+                if self._try_admit(req):
+                    self.queue.remove(req)
+                    admitted = True
+                    break
+                if self.sched.head_of_line:
+                    return  # FIFO: don't overtake the head request
+            if not admitted:
+                return
+
+    def _match(self, req: Request):
+        """Epoch-memoized cache match for a queued request (shared by the
+        hint pass and `_try_admit` — the same prompt is never re-walked
+        while the tree is unchanged)."""
+        hit = self._matches.get(req.req_id)
+        if hit is None or hit[0] != self.cache.epoch:
+            hit = (self.cache.epoch, self.cache.match(req.prompt))
+            self._matches[req.req_id] = hit
+        return hit[1]
+
+    def _try_admit(self, req: Request) -> bool:
+        """Place `req` in a FREE slot (prefix-cache aliasing + shard-
+        occupancy placement); False when no slot/shard can back it now."""
+        total = len(req.prompt) + req.max_new + self._margin
+        plan = pinned = None
+        if self.cache is not None:
+            m = self._match(req)
+            # the last prompt token is always computed (its logits seed the
+            # first generated token), so cap the usable match below it
+            mtoks, adopt, tail = m.plan(len(req.prompt) - 1,
+                                        self.pool.block_size)
+            if mtoks > 0:
+                plan = (mtoks, adopt, tail, m.shard)
+                # pin BEFORE any eviction below can see these nodes unpinned
+                pinned = adopt + ([tail] if tail is not None else [])
+                self.cache.acquire(pinned)
+        i = self._place(total, plan)
+        if i is None and plan is not None:
+            # the prefix's home shard has no usable slot: admit cold on the
+            # occupancy-best shard instead (slot affinity makes the cached
+            # blocks unreachable from other shards)
+            self.cache.release(pinned)
+            plan = pinned = None
+            i = self._place(total, None)
+        if i is None:
+            if pinned:
+                self.cache.release(pinned)
+            return False
+        self.pool.reset_slot(i)
+        self.pool.commit(i, total, self._max_growth)
+        prefix_len = 0
+        nodes: list = []
+        if plan is not None:
+            mtoks, adopt, tail, _ = plan
+            if adopt:
+                self.pool.adopt_prefix(i, [n.block for n in adopt],
+                                       len(adopt) * self.pool.block_size)
+            if tail is not None:
+                self.pool.cow_block(i, tail.block)
+                self.cache.release([tail])  # private copy made; unpin
+            self.pool.ensure(i, mtoks)
+            prefix_len = mtoks
+            nodes = adopt
+            self.stats["prefill_skipped_tokens"] += mtoks
+            self.stats["prefix_hits"] += 1
+        if self.draft is not None:
+            # the draft pool never aliases (serve/spec_decode.py owns no
+            # cache); _prefill_tick catches its cursor up over the skipped
+            # prefix with truncated-stack chunks
+            self.draft.pool.reset_slot(i)
+            self.draft.pool.commit(i, total, self._max_growth)
+        self.slots[i] = _Slot(state=PREFILL, req=req, cursor=prefix_len,
+                              prefix_len=prefix_len, cache_nodes=nodes)
+        self.stats["admitted"] += 1
+        if self.cache is not None:
+            # hit-rate stats book exactly once per ADMITTED request (a
+            # deferred request re-matches every tick; recording those
+            # retries would inflate the rate), and only ADOPTED matches
+            # count as hits (a cross-shard match that admitted cold is a
+            # miss in every way that matters)
+            self.cache.record(m if plan is not None else None)
+            self._matches.pop(req.req_id, None)  # left the queue
+        return True
+
+    def _place(self, total: int, plan) -> int | None:
+        """Pick a FREE slot for a request needing `total` positions.
+
+        With a prefix-cache `plan`, only the matched shard's slots can use
+        the cached blocks (slot affinity). Cold placement is shard-
+        occupancy-aware: shards are tried by free-block count (descending,
+        slot id breaking ties) instead of first-fit — single-shard pools
+        reduce to the original first-free-slot behavior exactly. When a
+        shard is short, unpinned cached prefixes on it are evicted before
+        giving up."""
+        free_by_shard: dict[int, list[int]] = {}
+        for i, s in enumerate(self.slots):
+            if s.state == FREE:
+                free_by_shard.setdefault(self.pool.shard_of_slot(i),
+                                         []).append(i)
+        if plan is not None:
+            shards = [plan[3]] if plan[3] in free_by_shard else []
+            cached = len(plan[1])
+        else:
+            shards = sorted(free_by_shard,
+                            key=lambda sh: (-self.pool.effective_free_blocks(sh)
+                                            if self.pool.paged else 0, sh))
+            cached = 0
+        for sh in shards:
+            i = free_by_shard[sh][0]
+            if self._admissible(i, total, cached):
+                return i
+        return None
+
+    def _admissible(self, slot: int, total: int, cached: int) -> bool:
+        if self.draft is not None and not self.draft.pool.can_admit(
+                total, self._max_growth, slot=slot):
+            return False
+        if self.pool.can_admit(total, self._max_growth, slot=slot,
+                               cached_blocks=cached):
+            return True
+        if self.cache is not None:
+            short = self.pool.admission_shortfall(
+                total, self._max_growth, slot=slot, cached_blocks=cached)
+            if short and self.cache.evict(self.pool.shard_of_slot(slot),
+                                          short) >= short:
+                return self.pool.can_admit(total, self._max_growth,
+                                           slot=slot, cached_blocks=cached)
+        return False
 
     def _prefill_tick(self) -> None:
         e = self.econf
-        for i, slot in enumerate(self.slots):
-            if slot.state != PREFILL:
-                continue
-            prompt = slot.req.prompt
-            remaining = len(prompt) - slot.cursor
-            size = e.prefill_chunk if remaining >= e.prefill_chunk else 1
-            chunk = prompt[slot.cursor: slot.cursor + size]
-            self.pool.ensure(i, slot.cursor + size)
+        cands = [(i, s) for i, s in enumerate(self.slots)
+                 if s.state == PREFILL]
+        if not cands:
+            return
+        # scheduler preemption point: the policy picks WHICH prefilling
+        # slot advances this tick (Fifo: lowest index, the original
+        # behavior; LatencyPolicy: most urgent request first). Slots NOT
+        # picked keep aging, so preemption is starvation-free too: a
+        # low-priority prompt passed over by a stream of critical arrivals
+        # grows its effective priority until it wins the pick.
+        i = self.sched.pick_prefill(cands, time.perf_counter())
+        for j, s in cands:
+            if j != i:
+                s.req.queued_ticks += 1
+        slot = self.slots[i]
+        prompt = slot.req.prompt
+        if self.draft is not None and slot.draft_len < slot.cursor:
+            # prefix-cache skip left the DRAFT behind (its pool never
+            # aliases): catch it up over the skipped tokens with truncated-
+            # stack chunks — draft_layers/L of a full forward, still one
+            # bounded chunk per tick
+            gap = slot.cursor - slot.draft_len
+            size = e.prefill_chunk if gap >= e.prefill_chunk else 1
             tokens = np.zeros((e.n_slots, size), np.int32)
-            tokens[i] = chunk
+            tokens[i] = prompt[slot.draft_len: slot.draft_len + size]
             pos = np.zeros((e.n_slots,), np.int32)
-            pos[i] = slot.cursor
+            pos[i] = slot.draft_len
             active = np.zeros((e.n_slots,), bool)
             active[i] = True
             t0 = time.perf_counter()
-            logits = self._forward(size, tokens, pos, active)
-            if self.draft is not None:
-                # the draft cache covers the prompt too: same chunk through
-                # the prefix stack (its layers recompute what the first
-                # draft_layers of the full forward just computed)
-                self.draft.pool.ensure(i, slot.cursor + size)
-                self.draft.forward(size, tokens, pos, active)
-            jax.block_until_ready(logits)  # else async compute leaks into decode_s
+            self.draft.pool.ensure(i, slot.draft_len + size)
+            out = self.draft.forward(size, tokens, pos, active)
+            jax.block_until_ready(out)
             self.stats["prefill_s"] += time.perf_counter() - t0
-            self.stats["prefill_tokens"] += size
-            slot.cursor += size
-            slot.draft_len = slot.cursor
-            if slot.cursor == len(prompt):
-                # prompt fully cached: sample the first generated token from
-                # the logits of the prompt's last position
-                tok = int(self._sample(logits[:, -1])[i])
-                slot.state = DECODE
-                slot.length = len(prompt)
-                slot.last_tok = tok
-                slot.generated.append(tok)
+            slot.draft_len += size
             return  # bounded work: one chunk per tick
+        remaining = len(prompt) - slot.cursor
+        size = e.prefill_chunk if remaining >= e.prefill_chunk else 1
+        chunk = prompt[slot.cursor: slot.cursor + size]
+        self.pool.ensure(i, slot.cursor + size)
+        tokens = np.zeros((e.n_slots, size), np.int32)
+        tokens[i] = chunk
+        pos = np.zeros((e.n_slots,), np.int32)
+        pos[i] = slot.cursor
+        active = np.zeros((e.n_slots,), bool)
+        active[i] = True
+        t0 = time.perf_counter()
+        logits = self._forward(size, tokens, pos, active)
+        if self.draft is not None:
+            # the draft cache covers the prompt too: same chunk through
+            # the prefix stack (its layers recompute what the first
+            # draft_layers of the full forward just computed)
+            self.draft.pool.ensure(i, slot.cursor + size)
+            self.draft.forward(size, tokens, pos, active)
+        jax.block_until_ready(logits)  # else async compute leaks into decode_s
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += size
+        self.stats["prefill_steps"] += 1
+        slot.cursor += size
+        slot.draft_len = slot.cursor
+        if slot.cursor == len(prompt):
+            # prompt fully cached: sample the first generated token from
+            # the logits of the prompt's last position
+            tok = int(self._sample(logits[:, -1])[i])
+            slot.state = DECODE
+            slot.length = len(prompt)
+            slot.last_tok = tok
+            slot.generated.append(tok)
+        return  # bounded work: one chunk per tick
 
     def _decode_tick(self) -> list[RequestResult]:
         e = self.econf
@@ -325,9 +532,19 @@ class ServeEngine:
         for i in list(dec):
             slot = self.slots[i]
             if len(slot.generated) >= slot.req.max_new:
-                finished.append(RequestResult(slot.req.req_id,
-                                              list(slot.req.prompt),
-                                              list(slot.generated)))
+                finished.append(RequestResult(
+                    slot.req.req_id, list(slot.req.prompt),
+                    list(slot.generated), arrival_s=slot.req.arrival_s,
+                    finish_s=time.perf_counter(),
+                    deadline_s=slot.req.deadline_s))
+                if self.cache is not None:
+                    # cache the completed stream's full blocks, then drop
+                    # this slot's pins — BEFORE release, while the blocks
+                    # are still referenced (insertion adds the cache's own
+                    # ref; release only ever decrefs)
+                    self.cache.insert(slot.req.prompt + slot.generated, i)
+                    if slot.cache_nodes:
+                        self.cache.release(slot.cache_nodes)
                 self.pool.release(i)
                 if self.draft is not None:
                     self.draft.pool.release(i)
@@ -392,8 +609,11 @@ class ServeEngine:
             # allocation and the step rebinds it, so XLA may update in place
             # instead of double-buffering it
             fn = self._step_fns[size] = jax.jit(step_fn, donate_argnums=(1,))
+        # stacked (n_slots, 2, max_blocks) read/write tables: scatters go
+        # through the write view, whose prefix-cache-aliased entries hold
+        # the sentinel — shared blocks are never written (kv_pool.py)
         logits, self.pool.caches = fn(
-            self.params, self.pool.caches, self.pool.table_device(),
+            self.params, self.pool.caches, self.pool.tables_device(),
             jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(active))
         return logits
 

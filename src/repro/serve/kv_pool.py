@@ -32,6 +32,17 @@ stays shard-local. `table_device()` then emits SHARD-LOCAL physical indices
 the same gather/scatter primitives work unchanged on the shard-local leaves
 shard_map hands them.
 
+Blocks are REFCOUNTED: a physical block may back the same logical prefix of
+several sequences at once (serve/prefix_cache.py aliases a cached prefix's
+blocks read-only into a new slot's table — `adopt_prefix` — and copies the
+first divergent / partial tail block privately — `cow_block`). A block
+returns to the free list only when its last reference drops (`_decref`);
+`truncate` is logical-only and never frees, so speculative rollback can
+never free a block another slot still references. Aliased table entries are
+masked out of the WRITE view (`tables_device` stacks a read table and a
+write table whose shared-prefix entries hold the sentinel), so a scatter
+through them provably drops — docs/CONVENTIONS.md §5.
+
 The device-side primitives (`gather_view` / `scatter_tokens`) are called
 from the mixer decode paths (models/attention.py, models/mla.py); the
 `KVPool` class is the host-side allocator driven by the engine scheduler.
@@ -91,6 +102,20 @@ def gather_view(pool: jax.Array, table: jax.Array) -> jax.Array:
     v = pool.at[table].get(mode="fill", fill_value=0)
     b, mb = table.shape
     return v.reshape(b, mb * pool.shape[1], *pool.shape[2:])
+
+
+def split_tables(block_table: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Resolve a block-table argument into (read_table, write_table).
+
+    A plain (B, MAXB) table is its own write view (the pre-prefix-cache
+    layout: dryrun lowering, the speculative draft pool). A stacked
+    (B, 2, MAXB) table — `KVPool.tables_device()` — carries a distinct
+    write view whose ALIASED-prefix entries hold the OOB sentinel, so
+    scatters through shared (refcount > 1) blocks drop by construction
+    while gathers still read them."""
+    if block_table.ndim == 3:
+        return block_table[:, 0], block_table[:, 1]
+    return block_table, block_table
 
 
 def scatter_tokens(pool: jax.Array, table: jax.Array, positions: jax.Array,
@@ -161,6 +186,18 @@ def init_cache(cfg: ArchConfig, n_slots: int, max_len: int, *, paged: bool,
         stages.append(jax.tree.map(
             lambda x: jnp.broadcast_to(x, (count, *x.shape)), one))
     return stages
+
+
+def _map_token_kinds(caches, fn):
+    """Apply fn to every token-kind leaf (kv / mla pool arrays)."""
+    out = []
+    for stage in caches:
+        ns = {}
+        for lk, kinds in stage.items():
+            ns[lk] = {k: (jax.tree.map(fn, v) if k in TOKEN_KINDS else v)
+                      for k, v in kinds.items()}
+        out.append(ns)
+    return out
 
 
 def _map_state_kinds(caches, fn):
@@ -256,7 +293,20 @@ class KVPool:
         self._committed = [0] * n_slots  # reserved blocks per admitted seq
         self._bound = [False] * n_slots  # slot currently holds a sequence
         self._lengths = [0] * n_slots    # logical tokens backed per slot
+        # per-block reference counts: slot table rows referencing the block
+        # plus at most one prefix-cache hold (serve/prefix_cache.py). A block
+        # is free iff its refcount is 0; _decref is the ONLY path back to the
+        # free list, so a shared block can never be double-freed.
+        self._ref = np.zeros(n_blocks, np.int32)
+        # leading logical blocks of each slot that are ALIASED (read-only):
+        # the write view of tables_device() masks them with the sentinel
+        self._shared_upto = [0] * n_slots
+        # set by the prefix cache: callable(shard, need) -> blocks freed into
+        # that shard's list by evicting unpinned cached prefixes
+        self.evict_hook = None
         self._table_dev = None
+        self._tables_dev = None
+        self._copy_fn = None
         # sliding-window reclamation (pure-lattn stacks, paged mode only):
         # blocks whose newest key predates every future query's window go
         # back to the free list mid-sequence, so live blocks per slot stay
@@ -291,6 +341,21 @@ class KVPool:
     def free_blocks_in_shard(self, shard: int) -> int:
         return len(self._frees[shard])
 
+    def effective_free_blocks(self, shard: int) -> int:
+        """Free blocks of `shard` minus outstanding commitments of its
+        admitted slots — the capacity a NEW request could actually draw on.
+        The engine's shard-occupancy placement ranks shards by this, so a
+        freshly committed (not yet allocated) sequence already steers the
+        next admission elsewhere."""
+        if self.n_shards == 1:
+            shard_slots = range(self.n_slots)
+        else:
+            shard_slots = range(shard * self.slots_per_shard,
+                                (shard + 1) * self.slots_per_shard)
+        outstanding = sum(self._committed[i] - len(self._owned[i])
+                          for i in shard_slots)
+        return len(self._frees[shard]) - outstanding
+
     def blocks_for(self, n_tokens: int) -> int:
         return math.ceil(n_tokens / self.block_size)
 
@@ -323,7 +388,7 @@ class KVPool:
             <= self.blocks_per_shard)
 
     def can_admit(self, total_tokens: int, max_growth: int | None = None,
-                  slot: int | None = None) -> bool:
+                  slot: int | None = None, cached_blocks: int = 0) -> bool:
         """Admission check: can a sequence of total_tokens be fully served
         alongside every already-admitted sequence?
 
@@ -333,7 +398,9 @@ class KVPool:
         both pass admission and later exhaust the pool mid-decode. With
         `n_shards > 1` pass the candidate `slot`: only its shard's free
         blocks and commitments count (slot affinity makes shards independent
-        allocators)."""
+        allocators). `cached_blocks` — prefix-cache blocks the candidate
+        would ADOPT rather than allocate (they are already resident, outside
+        the free list) — reduces its demand on the free list."""
         if total_tokens > self.max_len:
             return False
         if not self.paged:
@@ -355,8 +422,32 @@ class KVPool:
             free = self.free_blocks_in_shard(sh)
         outstanding = sum(self._committed[i] - len(self._owned[i])
                           for i in shard_slots)
-        return (free - outstanding
-                >= self.max_live_blocks(total_tokens, max_growth))
+        need = max(0, self.max_live_blocks(total_tokens, max_growth)
+                   - cached_blocks)
+        return free - outstanding >= need
+
+    def admission_shortfall(self, total_tokens: int,
+                            max_growth: int | None = None,
+                            slot: int | None = None,
+                            cached_blocks: int = 0) -> int:
+        """Free blocks MISSING for `can_admit` to pass on `slot`'s shard
+        (0 when it already passes) — what the engine asks the prefix cache
+        to evict before admitting."""
+        if not self.paged or total_tokens > self.max_len:
+            return 0
+        if self.n_shards == 1:
+            shard_slots = range(self.n_slots)
+            free = self.free_block_count
+        else:
+            sh = self.shard_of_slot(slot)
+            shard_slots = range(sh * self.slots_per_shard,
+                                (sh + 1) * self.slots_per_shard)
+            free = self.free_blocks_in_shard(sh)
+        outstanding = sum(self._committed[i] - len(self._owned[i])
+                          for i in shard_slots)
+        need = max(0, self.max_live_blocks(total_tokens, max_growth)
+                   - cached_blocks)
+        return max(0, need - (free - outstanding))
 
     def commit(self, slot: int, total_tokens: int,
                max_growth: int | None = None) -> None:
@@ -389,18 +480,20 @@ class KVPool:
                               f"{self.max_blocks}-entry block table")
         if self.window is not None:
             self._reclaim(slot)
-        free = self._frees[self.shard_of_slot(slot)]
+        sh = self.shard_of_slot(slot)
+        free = self._frees[sh]
         while self._alloc_upto[slot] < need:
-            if not free:
+            if not free and not (self.evict_hook is not None
+                                 and self.evict_hook(sh, 1) > 0):
                 raise OutOfBlocks(
                     f"slot {slot}: pool exhausted"
-                    + (f" (shard {self.shard_of_slot(slot)})"
-                       if self.n_shards > 1 else ""))
+                    + (f" (shard {sh})" if self.n_shards > 1 else ""))
             blk = free.pop()
+            self._ref[blk] = 1
             self._table[slot, self._alloc_upto[slot]] = blk
             owned.append(blk)
             self._alloc_upto[slot] += 1
-            self._table_dev = None
+            self._dirty()
         self._lengths[slot] = max(self._lengths[slot], n_tokens)
 
     def _reclaim(self, slot: int) -> None:
@@ -423,9 +516,9 @@ class KVPool:
             blk = int(self._table[slot, j])
             self._table[slot, j] = self.sentinel
             self._owned[slot].remove(blk)
-            self._frees[self.shard_of_block(blk)].append(blk)
+            self._decref(blk)
         self._live_from[slot] = first_live
-        self._table_dev = None
+        self._dirty()
         # freed keys end at first_live*BS - 1; a truncate to n keeps windows
         # sound only while n - window >= that newest freed key
         self._floor[slot] = first_live * self.block_size + self.window - 1
@@ -456,7 +549,11 @@ class KVPool:
         return self._lengths[slot]
 
     def release(self, slot: int) -> None:
-        """Unbind `slot`, returning its blocks to the free list."""
+        """Unbind `slot`, dropping its block references.
+
+        Exclusively-owned blocks (refcount 1) return to the free list;
+        blocks the prefix cache (or another slot) still references merely
+        lose this slot's reference — never a double free."""
         if not self._bound[slot]:
             raise SlotError(f"slot {slot}: release on an unbound slot "
                             "(double-free?)")
@@ -467,18 +564,27 @@ class KVPool:
             return
         blocks = self._owned[slot]
         if blocks:
-            # slot affinity: every owned block homes on the slot's shard
-            self._frees[self.shard_of_slot(slot)].extend(reversed(blocks))
+            # slot affinity: every owned block homes on the slot's shard;
+            # reversed so an exclusive slot's blocks re-enter the free list
+            # in the pre-refcount order (first-allocated pops first)
+            for blk in reversed(blocks):
+                self._decref(blk)
             self._owned[slot] = []
         if self._alloc_upto[slot]:
             self._table[slot, :] = self.sentinel
-            self._table_dev = None
+            self._dirty()
         self._alloc_upto[slot] = 0
         self._live_from[slot] = 0
         self._floor[slot] = 0
+        self._shared_upto[slot] = 0
 
-    def table_device(self):
-        """Device copy of the block table (None in dense mode).
+    def _dirty(self) -> None:
+        """Invalidate the cached device tables after any host-table edit."""
+        self._table_dev = None
+        self._tables_dev = None
+
+    def _local_table_np(self) -> np.ndarray:
+        """Host copy of the device-facing table (shard-local when sharded).
 
         Slot-affine pools emit SHARD-LOCAL physical indices: the decode step
         runs under a manual shard_map over "data", so each shard's rows must
@@ -486,19 +592,150 @@ class KVPool:
         subtract the slot's shard base; sentinels map to the LOCAL sentinel
         `blocks_per_shard` (still OOB-high for the local leaves — scatter
         drops, gathers fill zeros, exactly as in the single-shard layout)."""
+        if self.n_shards == 1:
+            return self._table.copy()
+        base = (np.arange(self.n_slots, dtype=np.int32)
+                // self.slots_per_shard)[:, None] * self.blocks_per_shard
+        return np.where(self._table == self.sentinel,
+                        self.blocks_per_shard,
+                        self._table - base).astype(np.int32)
+
+    @property
+    def local_sentinel(self) -> int:
+        return self.blocks_per_shard if self.n_shards > 1 else self.sentinel
+
+    def table_device(self):
+        """Device copy of the block table (None in dense mode)."""
         if not self.paged:
             return None
         if self._table_dev is None:
-            if self.n_shards == 1:
-                self._table_dev = jnp.asarray(self._table)
-            else:
-                base = (np.arange(self.n_slots, dtype=np.int32)
-                        // self.slots_per_shard)[:, None] * self.blocks_per_shard
-                local = np.where(self._table == self.sentinel,
-                                 self.blocks_per_shard,
-                                 self._table - base).astype(np.int32)
-                self._table_dev = jnp.asarray(local)
+            self._table_dev = jnp.asarray(self._local_table_np())
         return self._table_dev
+
+    def tables_device(self):
+        """Stacked (n_slots, 2, max_blocks) device tables (None when dense):
+        [:, 0] the READ table, [:, 1] the WRITE table, in which every
+        ALIASED logical block (`adopt_prefix`) holds the sentinel. The decode
+        step scatters through the write view only (`split_tables` in the
+        mixers), so shared prefix blocks are provably never written — the
+        masking is in the data, not in a host-side argument the compiled
+        step could ignore."""
+        if not self.paged:
+            return None
+        if self._tables_dev is None:
+            rt = self._local_table_np()
+            wt = rt.copy()
+            for s, k in enumerate(self._shared_upto):
+                if k:
+                    wt[s, :k] = self.local_sentinel
+            self._tables_dev = jnp.asarray(
+                np.stack([rt, wt], axis=1).astype(np.int32))
+        return self._tables_dev
+
+    # ---- prefix sharing (refcounted aliasing + copy-on-write) ------------
+
+    def _decref(self, block: int) -> None:
+        """Drop one reference; the last reference frees the block."""
+        self._ref[block] -= 1
+        if self._ref[block] < 0:
+            raise SlotError(f"block {block}: decref below zero (double free)")
+        if self._ref[block] == 0:
+            self._frees[self.shard_of_block(block)].append(block)
+
+    def incref(self, block: int) -> None:
+        """Add an external (prefix-cache) hold on an allocated block."""
+        if self._ref[block] <= 0:
+            raise SlotError(f"block {block}: incref on a free block")
+        self._ref[block] += 1
+
+    def refcount(self, block: int) -> int:
+        return int(self._ref[block])
+
+    def adopt_prefix(self, slot: int, blocks: list[int],
+                     n_tokens: int) -> None:
+        """Alias cached `blocks` READ-ONLY as `slot`'s logical prefix.
+
+        The slot's table rows [0, len(blocks)) point at the shared physical
+        blocks (each incref'd); the write view of `tables_device()` masks
+        them with the sentinel, so the slot can gather the cached K/V but
+        any scatter targeting those logical blocks drops. Only valid on a
+        freshly committed slot (no blocks yet), with every block homed on
+        the slot's shard (the slot-affine invariant the sharded decode step
+        rests on), and only for unwindowed pools (a reclaimed prefix is not
+        fully resident, so sharing it would read zeros)."""
+        if not self.paged:
+            raise SlotError("adopt_prefix on a dense pool: no block table")
+        if not self._bound[slot]:
+            raise SlotError(f"slot {slot}: adopt_prefix on an unbound slot")
+        if self._owned[slot]:
+            raise SlotError(f"slot {slot}: adopt_prefix after allocation")
+        if self.window is not None:
+            raise SlotError("adopt_prefix on a sliding-window pool: "
+                            "reclaimed prefixes are not fully resident")
+        if n_tokens > len(blocks) * self.block_size:
+            raise SlotError(f"slot {slot}: {n_tokens} tokens exceed "
+                            f"{len(blocks)} adopted blocks")
+        sh = self.shard_of_slot(slot)
+        if any(self.shard_of_block(b) != sh for b in blocks):
+            raise SlotError(
+                f"slot {slot} (shard {sh}): adopting off-shard blocks "
+                "violates slot affinity")
+        for j, blk in enumerate(blocks):
+            self.incref(blk)
+            self._table[slot, j] = blk
+            self._owned[slot].append(blk)
+        self._alloc_upto[slot] = len(blocks)
+        self._shared_upto[slot] = len(blocks)
+        self._lengths[slot] = max(self._lengths[slot], n_tokens)
+        self._dirty()
+
+    def cow_block(self, slot: int, src: int) -> int:
+        """Copy-on-write: append a PRIVATE copy of block `src` as `slot`'s
+        next logical block (the first divergent token or a partial tail
+        falls inside a cached block: its contents up to the divergence are
+        reused bit-for-bit, the rest is stale-behind-the-position-mask and
+        overwritten by subsequent scatters). Returns the new block id."""
+        if not self.paged:
+            raise SlotError("cow_block on a dense pool: no block table")
+        if not self._bound[slot]:
+            raise SlotError(f"slot {slot}: cow_block on an unbound slot")
+        sh = self.shard_of_slot(slot)
+        if self.shard_of_block(src) != sh:
+            raise SlotError(f"slot {slot} (shard {sh}): COW source {src} "
+                            "homes on another shard")
+        if self._ref[src] <= 0:
+            raise SlotError(f"block {src}: COW from a free block")
+        j = self._alloc_upto[slot]
+        if j >= self.max_blocks:
+            # checked BEFORE popping: a pop-then-raise would strand the
+            # popped block at refcount 1 with no owner (unreachable leak)
+            raise OutOfBlocks(f"slot {slot}: table full at COW")
+        free = self._frees[sh]
+        if not free and not (self.evict_hook is not None
+                             and self.evict_hook(sh, 1) > 0):
+            raise OutOfBlocks(f"slot {slot}: no free block for COW"
+                              + (f" (shard {sh})" if self.n_shards > 1
+                                 else ""))
+        dst = free.pop()
+        self._ref[dst] = 1
+        self._table[slot, j] = dst
+        self._owned[slot].append(dst)
+        self._alloc_upto[slot] = j + 1
+        self._copy_block_device(src, dst)
+        self._dirty()
+        return dst
+
+    def _copy_block_device(self, src: int, dst: int) -> None:
+        """Device copy of every token-kind leaf's block `src` -> `dst`
+        (GLOBAL ids — the cache pytree lives in its committed global
+        layout; the per-step shard split happens inside the jitted step)."""
+        if self._copy_fn is None:
+            def cp(caches, s, d):
+                return _map_token_kinds(
+                    caches, lambda leaf: leaf.at[:, d].set(leaf[:, s]))
+            self._copy_fn = jax.jit(cp, donate_argnums=(0,))
+        self.caches = self._copy_fn(self.caches, jnp.int32(src),
+                                    jnp.int32(dst))
 
     # ---- slot state ----
 

@@ -1,0 +1,299 @@
+"""Radix-tree prefix cache over the paged KV pool.
+
+Real serving fleets see enormous shared-prompt overlap (system prompts,
+few-shot preambles, multi-turn histories). The block tables of
+serve/kv_pool.py already decouple logical from physical blocks, so sharing
+is purely an allocator problem: this module keeps a token-level radix tree
+whose nodes OWN refcounted physical blocks, and on admission the engine
+
+  1. matches the longest cached prefix of the new prompt,
+  2. aliases the fully-matched blocks READ-ONLY into the new slot's table
+     (`KVPool.adopt_prefix` — their prefill is skipped entirely),
+  3. copy-on-writes the block holding the first divergent token or the
+     partial tail (`KVPool.cow_block` — the matched part of that block is
+     reused bit-for-bit too, so the WHOLE matched prefix costs zero
+     prefill forward passes).
+
+On retirement the completed stream's full blocks are inserted; when the
+pool runs out of blocks, unpinned nodes are evicted leaf-first in LRU
+order (a node whose block any live slot still aliases is pinned by its
+`refs` count, and a node with referenced descendants is transitively
+pinned because adoption refs the whole path).
+
+Tree shape: children are keyed by the `block_size`-token tuple a child's
+block covers, so every node owns exactly ONE full physical block and the
+tree needs no edge splitting. Matching is still TOKEN-level: a prompt that
+diverges inside a block gets the in-block common prefix via COW. Exactness
+(docs/CONVENTIONS.md §3-5): the decode forward is row-local and
+deterministic, so under `bf16` a cached block's K/V equals what the new
+request's own prefill would have written, bit for bit; quantizing schemes
+share an activation absmax across the batch, so quartet2 hot runs are
+deterministic but not bit-comparable to cold runs (the same caveat as
+spec-decode chunks and the sharded engine).
+
+Exclusions (`supported`): dense pools have no block tables; sliding-window
+pools (`reclaim_window`) free out-of-window blocks mid-sequence, so a
+cached prefix is not fully resident past the window and must not be
+shared; recurrent-state archs (wkv / lru) integrate the whole prefix into
+O(1) slot state that blocks cannot reconstruct. With the slot-affine
+sharded pool (PR 4), a prefix is only reusable by slots homed on its
+shard: every node records the shard its block lives on, and insertion
+never extends a path across shards.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.serve.kv_pool import KVPool
+
+
+class _Node:
+    """One cached full block: `tokens` (block_size ids) -> physical block."""
+
+    __slots__ = ("parent", "children", "tokens", "block", "shard", "refs",
+                 "last_used")
+
+    def __init__(self, parent, tokens: tuple[int, ...], block: int,
+                 shard: int, clock: int):
+        self.parent = parent
+        self.children: dict[tuple[int, ...], _Node] = {}
+        self.tokens = tokens
+        self.block = block
+        self.shard = shard
+        self.refs = 0          # live slots currently aliasing this block
+        self.last_used = clock
+
+
+@dataclass
+class Match:
+    """Longest cached prefix of a prompt.
+
+    `nodes` — path of fully-matched nodes (len(nodes) * block_size tokens);
+    `partial_node` / `partial` — a child whose block matches `partial` more
+    tokens (0 < partial < block_size) before diverging; `tokens` — total
+    matched token count. The engine caps `tokens` at len(prompt) - 1 (the
+    last prompt token must be computed to produce first-token logits) and
+    re-derives the alias/COW split from the capped value via `plan`.
+    """
+    nodes: list[_Node] = field(default_factory=list)
+    partial_node: _Node | None = None
+    partial: int = 0
+
+    @property
+    def tokens(self) -> int:
+        return sum(len(n.tokens) for n in self.nodes) + self.partial
+
+    @property
+    def shard(self) -> int | None:
+        if self.nodes:
+            return self.nodes[0].shard
+        if self.partial_node is not None:
+            return self.partial_node.shard
+        return None
+
+    def plan(self, cap: int, block_size: int):
+        """(m, adopt_nodes, tail_node) for a match capped at `cap` tokens:
+        adopt_nodes' blocks alias read-only (full blocks below m), and
+        tail_node (if any) supplies the COW source for m's partial block."""
+        m = min(self.tokens, cap)
+        full = m // block_size
+        adopt = self.nodes[:full]
+        tail = None
+        if m % block_size:
+            tail = (self.nodes[full] if full < len(self.nodes)
+                    else self.partial_node)
+        return m, adopt, tail
+
+
+class PrefixCache:
+    """Host-side radix cache bound to one KVPool (the engine's main pool).
+
+    Pool-level laws it maintains (tests/test_kv_pool.py):
+      - a cached node holds exactly ONE pool reference on its block
+        (taken at insertion, dropped at eviction);
+      - a node is evictable iff no slot aliases it (`refs == 0`) — pinned
+        nodes (and, transitively, their ancestors) never free blocks a
+        live slot still reads;
+      - eviction is leaf-first LRU and feeds the pool's free list through
+        `KVPool._decref`, so conservation (free + referenced == n_blocks)
+        holds at every step.
+    """
+
+    def __init__(self, pool: KVPool):
+        if not self.supported(pool):
+            raise ValueError(
+                "PrefixCache requires a paged pool without a sliding-window "
+                "reclaim horizon and without recurrent state kinds "
+                "(dense layouts have no block table; windowed prefixes are "
+                "not fully resident; wkv/lru state is not block-addressed)")
+        self.pool = pool
+        self.block_size = pool.block_size
+        self.root = _Node(None, (), -1, -1, 0)
+        self._clock = 0
+        # bumped whenever the TREE changes (insert/evict) — matching is
+        # topology-only, so callers may reuse a Match until the epoch moves
+        # (the engine memoizes per queued request instead of re-walking the
+        # radix tree every scheduler tick)
+        self.epoch = 0
+        self.stats = {"lookups": 0, "hits": 0, "hit_tokens": 0,
+                      "inserted_blocks": 0, "evicted_blocks": 0}
+        pool.evict_hook = self.evict
+
+    @staticmethod
+    def supported(pool: KVPool) -> bool:
+        return pool.paged and pool.window is None and not pool.has_state_kinds
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    # ---- lookup ----------------------------------------------------------
+
+    def record(self, match: Match | None) -> None:
+        """Book one lookup (and its hit) in the stats. Called by the engine
+        ONCE per successful admission — not from `match`, which may run
+        several times for the same queued request (placement retries each
+        tick, scheduler hint scans) and would inflate the hit rate. Pass
+        None for an admission that did not USE its match (e.g. the cached
+        prefix homed on a shard with no usable slot): books a miss."""
+        self.stats["lookups"] += 1
+        if match is not None and match.tokens:
+            self.stats["hits"] += 1
+            self.stats["hit_tokens"] += match.tokens
+
+    def match(self, prompt: list[int]) -> Match:
+        """Longest cached prefix of `prompt` (token-level; may end inside a
+        block). Does NOT pin anything (call `acquire` on the planned nodes
+        before allocating against the pool) and does NOT book stats (the
+        engine calls `record` once per admission)."""
+        bs = self.block_size
+        node, nodes = self.root, []
+        d = 0
+        while (d + 1) * bs <= len(prompt):
+            child = node.children.get(tuple(prompt[d * bs:(d + 1) * bs]))
+            if child is None:
+                break
+            nodes.append(child)
+            node = child
+            d += 1
+        # partial tail: the child sharing the longest in-block prefix with
+        # the remaining tokens (children are few; a linear scan is fine)
+        rest = prompt[d * bs:]
+        best, best_len = None, 0
+        for child in node.children.values():
+            n = 0
+            for a, b in zip(rest, child.tokens):
+                if a != b:
+                    break
+                n += 1
+            if n > best_len:
+                best, best_len = child, n
+        return Match(nodes=nodes, partial_node=best, partial=best_len)
+
+    # ---- pinning ---------------------------------------------------------
+
+    def acquire(self, nodes: list[_Node]) -> None:
+        """Pin `nodes` (a slot now aliases / is copying their blocks)."""
+        clock = self._tick()
+        for n in nodes:
+            n.refs += 1
+            n.last_used = clock
+
+    def release(self, nodes: list[_Node]) -> None:
+        clock = self._tick()
+        for n in nodes:
+            assert n.refs > 0, "prefix-cache release without acquire"
+            n.refs -= 1
+            n.last_used = clock
+
+    # ---- insertion (request retirement) ----------------------------------
+
+    def insert(self, tokens: list[int], slot: int) -> int:
+        """Cache the FULL blocks of a retiring slot's token stream.
+
+        Walks/extends the tree block by block: an existing node dedups (the
+        slot's physical block — aliased or independently prefilled — is
+        simply dropped by the slot's subsequent `release`); a missing node
+        adopts the slot's block with one cache reference, which survives
+        the release. Paths never mix shards: extension stops at the first
+        shard mismatch (that prefix stays cached for its own shard only).
+        Returns the number of newly cached blocks. Call BEFORE
+        `pool.release(slot)`."""
+        pool = self.pool
+        shard = pool.shard_of_slot(slot)
+        clock = self._tick()
+        node, added = self.root, 0
+        bs = self.block_size
+        for d in range(len(tokens) // bs):
+            key = tuple(tokens[d * bs:(d + 1) * bs])
+            child = node.children.get(key)
+            if child is not None:
+                if child.shard != shard:
+                    break
+                child.last_used = clock
+                node = child
+                continue
+            blk = int(pool._table[slot, d])
+            if blk == pool.sentinel:
+                break
+            pool.incref(blk)
+            child = _Node(node, key, blk, shard, clock)
+            node.children[key] = child
+            node = child
+            added += 1
+        self.stats["inserted_blocks"] += added
+        if added:
+            self.epoch += 1
+        return added
+
+    # ---- eviction --------------------------------------------------------
+
+    def _evictable_leaves(self, shard: int | None):
+        out = []
+
+        def walk(n):
+            for c in n.children.values():
+                if c.children:
+                    walk(c)
+                elif c.refs == 0 and (shard is None or c.shard == shard):
+                    out.append(c)
+
+        walk(self.root)
+        return out
+
+    def evict(self, shard: int | None, need: int) -> int:
+        """Free >= `need` blocks homed on `shard` by LRU leaf eviction
+        (best effort — returns the number actually freed). Also the pool's
+        `evict_hook`, so an `ensure`/COW that finds the free list empty
+        reclaims cache-held blocks transparently."""
+        freed = 0
+        while freed < need:
+            leaves = self._evictable_leaves(shard)
+            if not leaves:
+                break
+            leaves.sort(key=lambda n: n.last_used)
+            for n in leaves:
+                del n.parent.children[n.tokens]
+                self.pool._decref(n.block)
+                freed += 1
+                if freed >= need:
+                    break
+        self.stats["evicted_blocks"] += freed
+        if freed:
+            self.epoch += 1
+        return freed
+
+    # ---- introspection ---------------------------------------------------
+
+    def cached_blocks(self) -> int:
+        n = 0
+
+        def walk(node):
+            nonlocal n
+            for c in node.children.values():
+                n += 1
+                walk(c)
+
+        walk(self.root)
+        return n

@@ -1,0 +1,104 @@
+"""Pluggable serving scheduler policies (admission order + prefill pick).
+
+The engine's tick loop (serve/engine.py) is throughput-shaped: admit from
+the queue, prefill ONE chunk, run one batched decode step. What used to be
+hard-coded FIFO is now a policy object consulted at exactly two points —
+neither of which changes any compiled step shape:
+
+  admission_order(queue, now)  — the order in which queued requests are
+      OFFERED a slot this tick, plus `head_of_line`: whether a request
+      that cannot be placed blocks everything behind it (FIFO semantics)
+      or is skipped (latency semantics; aging below prevents starvation).
+  pick_prefill(candidates, now) — which PREFILL-state slot receives this
+      tick's single prefill chunk: latency-critical admissions can preempt
+      an older request's remaining prompt chunks.
+
+`FifoPolicy` (the default) reproduces the pre-policy engine EXACTLY:
+queue order with head-of-line blocking, lowest-index prefill slot. The
+whole pre-existing serving test suite runs under it unchanged.
+
+`LatencyPolicy` adds per-request `priority` (higher = more urgent) and
+`deadline_s` (seconds after arrival), ordering by
+
+  (effective priority desc, deadline slack asc, arrival order)
+
+where effective priority = priority + waited_ticks // aging_ticks. The
+aging term is TICK-based (deterministic — tests can assert the bound
+exactly): any request's effective priority grows without bound while it
+waits, so after at most (max_priority_gap + 1) * aging_ticks ticks it
+outranks every fixed-priority competitor — the starvation-freedom bound
+tests/test_scheduler.py asserts. Cache-aware ordering: among otherwise
+equal requests, a larger cached prefix sorts first (it is cheaper to
+admit — its prefill is mostly skipped), which both drains the queue
+faster and reuses cached blocks before they age out.
+
+Determinism: policies are pure functions of (queue snapshot, tick
+counters, request fields); `now` is only consulted for deadline slack,
+and requests submitted before `run()` share one arrival-clock origin, so
+orderings are reproducible run-to-run.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+class SchedulerPolicy:
+    """Base policy = FIFO. Subclass and override to change ordering only;
+    the engine owns placement (shard occupancy, cache affinity) and all
+    pool interactions."""
+
+    #: a request that cannot be placed blocks those behind it (strict FIFO)
+    head_of_line: bool = True
+
+    def admission_order(self, queue, now: float):
+        """Queue snapshot -> iteration order for this tick's admissions."""
+        return list(queue)
+
+    def pick_prefill(self, candidates, now: float) -> int:
+        """candidates: [(slot_index, slot), ...] in slot order, all in
+        PREFILL state and non-empty. Returns the slot index to advance."""
+        return candidates[0][0]
+
+
+class FifoPolicy(SchedulerPolicy):
+    """Today's behavior, exactly: submission order, head-of-line blocking,
+    lowest-index prefill slot."""
+
+
+@dataclass
+class LatencyPolicy(SchedulerPolicy):
+    """Latency-aware admission + prefill preemption with starvation-free
+    aging. See module docstring for the ordering law."""
+
+    #: queue ticks per +1 effective priority while waiting (aging)
+    aging_ticks: int = 8
+
+    head_of_line = False
+
+    def _slack(self, req, now: float) -> float:
+        if req.deadline_s is None:
+            return float("inf")
+        return (req.arrival_s + req.deadline_s) - now
+
+    def effective_priority(self, req) -> int:
+        return req.priority + req.queued_ticks // max(self.aging_ticks, 1)
+
+    def admission_order(self, queue, now: float):
+        return sorted(
+            queue,
+            key=lambda r: (-self.effective_priority(r), self._slack(r, now),
+                           -getattr(r, "cached_hint", 0), r.req_id))
+
+    def pick_prefill(self, candidates, now: float) -> int:
+        """Preemption point: the most urgent PREFILL slot gets the chunk
+        (a freshly admitted latency-critical request overtakes the
+        remaining prompt chunks of earlier, lower-priority admissions).
+        Starvation-free here too: the engine ages the slots NOT picked
+        (queued_ticks keeps growing mid-prefill), so a passed-over prompt
+        eventually outranks any fixed-priority stream."""
+        def key(item):
+            i, slot = item
+            r = slot.req
+            return (-self.effective_priority(r), self._slack(r, now), i)
+        return min(candidates, key=key)[0]

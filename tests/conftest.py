@@ -40,6 +40,10 @@ _KERNEL_SUITES = {"test_kernels.py", "test_paged_attention.py"}
 # by path like the kernel marker above.
 _DIST_SUITES = {"test_dist.py", "test_pipeline.py", "test_serve_sharded.py"}
 
+# Scheduler-policy suite (admission ordering, aging, prefill preemption):
+# `-m scheduler` selects it, wired by path like the markers above.
+_SCHED_SUITES = {"test_scheduler.py"}
+
 
 def pytest_collection_modifyitems(config, items):
     for item in items:
@@ -47,6 +51,8 @@ def pytest_collection_modifyitems(config, items):
             item.add_marker(pytest.mark.kernels)
         if item.fspath.basename in _DIST_SUITES:
             item.add_marker(pytest.mark.dist)
+        if item.fspath.basename in _SCHED_SUITES:
+            item.add_marker(pytest.mark.scheduler)
 
 
 @pytest.fixture(scope="session")

@@ -528,3 +528,267 @@ def test_shard_affinity_random_walk(seed):
         except OutOfBlocks:
             pass
         _check_affinity(pool)
+
+
+# --------------------------------------------------------------------------
+# refcounted prefix sharing: adopt_prefix / cow_block / cache-style holds
+# (the pool-level laws serve/prefix_cache.py rests on)
+# --------------------------------------------------------------------------
+
+import collections
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _ref_conserved(pool: KVPool):
+    """Generalized conservation under sharing: the free list and the
+    refcounts partition the pool (free xor referenced), and no slot's table
+    references a block beyond its refcount."""
+    free = set(pool._free)
+    for b in range(pool.n_blocks):
+        if b in free:
+            assert pool.refcount(b) == 0, b
+        else:
+            assert pool.refcount(b) > 0, b
+    assert len(free) == pool.free_block_count  # free list holds no dupes
+    owners = collections.Counter()
+    for o in pool._owned:
+        owners.update(o)
+    for b, k in owners.items():
+        assert pool.refcount(b) >= k, (b, k, pool.refcount(b))
+
+
+def test_adopt_prefix_shares_blocks_and_conserves():
+    """fork/free conservation: a cache hold keeps a retired slot's blocks
+    out of the free list; adoption aliases them into another slot; each
+    release drops exactly one reference; the final cache drop frees."""
+    pool = _pool(n_blocks=10)
+    pool.commit(0, 8)
+    pool.ensure(0, 8)                       # 2 blocks
+    blocks = list(pool._owned[0])
+    for b in blocks:                        # cache insertion: one hold each
+        pool.incref(b)
+    pool.release(0)                         # slot ref drops; cache ref holds
+    _ref_conserved(pool)
+    assert pool.free_block_count == 8       # NOT freed
+    assert all(pool.refcount(b) == 1 for b in blocks)
+
+    pool.commit(1, 16)
+    pool.adopt_prefix(1, blocks, 8)         # alias read-only into slot 1
+    _ref_conserved(pool)
+    assert all(pool.refcount(b) == 2 for b in blocks)
+    assert pool._owned[1] == blocks
+    assert list(pool._table[1, :2]) == blocks
+    assert pool.length(1) == 8
+    pool.ensure(1, 13)                      # grows PRIVATE blocks after
+    _ref_conserved(pool)
+    assert pool._shared_upto[1] == 2
+
+    pool.release(1)                         # aliases drop, cache still holds
+    _ref_conserved(pool)
+    assert all(pool.refcount(b) == 1 for b in blocks)
+    assert pool.free_block_count == 8       # only the private block returned
+    for b in blocks:                        # cache eviction: last ref frees
+        pool._decref(b)
+    _ref_conserved(pool)
+    assert pool.free_block_count == 10
+    with pytest.raises(SlotError):          # no double-free past zero
+        pool._decref(blocks[0])
+
+
+def test_truncate_never_frees_shared_blocks():
+    """Spec-rollback safety: truncate on a slot with an adopted prefix is
+    logical-only — it can never free a block another owner references."""
+    pool = _pool(n_blocks=10)
+    pool.commit(0, 8)
+    pool.ensure(0, 8)
+    blocks = list(pool._owned[0])
+    for b in blocks:
+        pool.incref(b)                      # cache hold
+    pool.release(0)
+    pool.commit(1, 20)
+    pool.adopt_prefix(1, blocks, 8)
+    pool.ensure(1, 8 + 4)                   # spec verify-chunk overshoot
+    refs0 = [pool.refcount(b) for b in blocks]
+    pool.truncate(1, 8)                     # full rejection
+    assert [pool.refcount(b) for b in blocks] == refs0
+    _ref_conserved(pool)
+    pool.release(1)
+    _ref_conserved(pool)
+    assert all(pool.refcount(b) == 1 for b in blocks)  # cache survives
+
+
+def test_adopt_prefix_guards():
+    pool = _pool()
+    with pytest.raises(SlotError):          # unbound slot
+        pool.adopt_prefix(0, [0], 4)
+    pool.commit(0, 8)
+    pool.ensure(0, 4)
+    with pytest.raises(SlotError):          # already allocated
+        pool.adopt_prefix(0, [1], 4)
+    pool.commit(1, 8)
+    with pytest.raises(SlotError):          # too many tokens for the blocks
+        pool.adopt_prefix(1, list(pool._owned[0]), MAX_LEN)
+
+
+def test_windowed_pool_refuses_adoption():
+    """Windowed-reclaim exclusion: a sliding-window pool frees out-of-window
+    blocks mid-sequence, so a cached prefix is not fully resident — sharing
+    must be refused at the pool level, not just skipped by the engine."""
+    pool = _wpool()
+    pool.commit(0, 16)
+    pool.ensure(0, 8)
+    blocks = list(pool._owned[0])
+    pool.commit(1, 16)
+    with pytest.raises(SlotError):
+        pool.adopt_prefix(1, blocks, 8)
+    from repro.serve.prefix_cache import PrefixCache
+    assert not PrefixCache.supported(pool)
+    assert PrefixCache.supported(_pool())
+
+
+def test_sharded_adopt_and_cow_respect_affinity():
+    pool = _spool()
+    pool.commit(0, 8)
+    pool.ensure(0, 8)                       # shard-0 blocks
+    blocks = list(pool._owned[0])
+    for b in blocks:
+        pool.incref(b)
+    pool.release(0)
+    pool.commit(2, 8)                       # slot 2 homes on shard 1
+    with pytest.raises(SlotError):
+        pool.adopt_prefix(2, blocks, 8)
+    with pytest.raises(SlotError):
+        pool.cow_block(2, blocks[0])
+    pool.commit(1, 8)                       # slot 1: same shard — fine
+    pool.adopt_prefix(1, blocks, 8)
+    _check_affinity(pool)
+    pool.release(1)
+    for b in blocks:
+        pool._decref(b)
+    _check_affinity(pool)
+
+
+def test_cow_block_copies_device_contents():
+    """cow_block appends a PRIVATE block whose token-kind contents equal the
+    source block's, bit for bit."""
+    pool = _pool(n_blocks=6)
+    pool.commit(0, 8)
+    pool.ensure(0, 8)
+    src = pool._owned[0][0]
+    k, v = pool.caches[0]["l0"]["kv"]
+    rng = np.random.RandomState(0)
+    kv_val = rng.standard_normal(k.shape[2:]).astype(np.float32)
+    k = k.at[:, src].set(jnp.asarray(kv_val, k.dtype))
+    pool.caches[0]["l0"]["kv"] = (k, v)
+    pool.commit(1, 8)
+    dst = pool.cow_block(1, src)
+    assert dst != src
+    assert pool._owned[1] == [dst]
+    assert pool._shared_upto[1] == 0        # a COW block is writable
+    k2, _ = pool.caches[0]["l0"]["kv"]
+    np.testing.assert_array_equal(np.asarray(k2[:, dst], np.float32),
+                                  np.asarray(k2[:, src], np.float32))
+    _ref_conserved(pool)
+
+
+def test_write_table_masks_adopted_prefix_only():
+    """tables_device(): read view carries the real ids everywhere; write
+    view holds the sentinel exactly over the adopted (read-only) prefix."""
+    pool = _pool(n_blocks=10)
+    pool.commit(0, 12)
+    pool.ensure(0, 12)
+    blocks = list(pool._owned[0])
+    for b in blocks:
+        pool.incref(b)
+    pool.release(0)
+    pool.commit(1, 20)
+    pool.adopt_prefix(1, blocks, 12)
+    pool.ensure(1, 17)                      # + 2 private blocks
+    t = np.asarray(pool.tables_device())
+    assert t.shape == (N_SLOTS, 2, MAX_BLOCKS)
+    read, write = t[1, 0], t[1, 1]
+    assert list(read[:5]) == list(pool._table[1, :5])
+    assert (write[:3] == pool.sentinel).all()      # aliased: write-masked
+    assert list(write[3:5]) == list(read[3:5])     # private: writable
+    np.testing.assert_array_equal(t[:, 0], np.asarray(pool.table_device()))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_sharing_random_walk_conserves(seed):
+    """Property walk over the full sharing lifecycle — normal alloc, cache
+    insertion (incref), adoption, COW, truncate, release, eviction
+    (decref) — conserving the free/referenced partition at every step."""
+    rng = random.Random(seed)
+    pool = _pool(n_blocks=12)
+    cache: list[list[int]] = []             # simulated cache: held groups
+    bound = [False] * N_SLOTS
+    shared_len = [0] * N_SLOTS              # adopted tokens per slot
+    for _ in range(80):
+        op = rng.choice(["commit", "grow", "adopt", "cow", "truncate",
+                         "insert_release", "release", "evict"])
+        s = rng.randrange(N_SLOTS)
+        try:
+            if op == "commit" and not bound[s]:
+                pool.commit(s, rng.randint(4, MAX_LEN))
+                bound[s] = True
+                shared_len[s] = 0
+            elif op == "grow" and bound[s]:
+                pool.ensure(s, min(pool.length(s) + rng.randint(1, 6),
+                                   MAX_LEN))
+            elif op == "adopt" and bound[s] and not pool._owned[s] and cache:
+                grp = rng.choice(cache)
+                take = grp[: rng.randint(1, len(grp))]
+                pool.adopt_prefix(s, take, len(take) * BLOCK)
+                shared_len[s] = len(take) * BLOCK
+            elif op == "cow" and bound[s] and cache:
+                pool.cow_block(s, rng.choice(rng.choice(cache)))
+            elif op == "truncate" and bound[s]:
+                pool.truncate(s, rng.randint(shared_len[s], pool.length(s)))
+            elif op == "insert_release" and bound[s]:
+                grp = [b for b in pool._owned[s]
+                       if not any(b in g for g in cache)]
+                if grp:
+                    for b in grp:
+                        pool.incref(b)
+                    cache.append(grp)
+                pool.release(s)
+                bound[s] = False
+            elif op == "release" and bound[s]:
+                pool.release(s)
+                bound[s] = False
+            elif op == "evict" and cache:
+                grp = cache.pop(rng.randrange(len(cache)))
+                for b in grp:
+                    pool._decref(b)
+        except (OutOfBlocks, SlotError):
+            pass
+        _ref_conserved(pool)
+    # teardown: everything accounted for
+    for s in range(N_SLOTS):
+        if bound[s]:
+            pool.release(s)
+    for grp in cache:
+        for b in grp:
+            pool._decref(b)
+    _ref_conserved(pool)
+    assert pool.free_block_count == pool.n_blocks
+
+
+def test_cow_block_on_full_table_leaks_nothing():
+    """A COW against a slot whose table is already full must raise WITHOUT
+    consuming a free block (pop-then-raise would strand it at refcount 1
+    with no owner — unreachable forever)."""
+    pool = _pool(n_blocks=12)
+    pool.commit(0, MAX_LEN)
+    pool.ensure(0, MAX_LEN)                 # table full: MAX_BLOCKS blocks
+    src = pool._owned[0][0]
+    free0 = pool.free_block_count
+    with pytest.raises(OutOfBlocks):
+        pool.cow_block(0, src)
+    assert pool.free_block_count == free0   # nothing popped
+    _ref_conserved(pool)
+    pool.release(0)
+    assert pool.free_block_count == pool.n_blocks

@@ -415,3 +415,163 @@ def test_sampler_modes():
     seen = {int(sample_tokens(logits, temps, topk,
                               jax.random.PRNGKey(i))[2]) for i in range(64)}
     assert len(seen) > 1
+
+
+# --------------------------------------------------------------------------
+# radix-tree prefix cache (serve/prefix_cache.py): zero prefill over the
+# shared prefix, bitwise stream parity hot vs cold (ISSUE 5 acceptance)
+# --------------------------------------------------------------------------
+
+def _cache_engine(cfg, params, prefix_cache, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("scheme", "bf16")
+    kw.setdefault("prequant", False)
+    return ServeEngine(cfg, params, EngineConfig(prefix_cache=prefix_cache,
+                                                 **kw))
+
+
+def _wave(eng, prompts, max_new=4):
+    ids = [eng.submit(Request(prompt=p, max_new=max_new)) for p in prompts]
+    res = {r.req_id: r.tokens for r in eng.run()}
+    return [res[i] for i in ids]
+
+
+@pytest.mark.parametrize("arch", ["yi_9b", "deepseek_v3_671b"],
+                         ids=["gqa", "mla"])
+def test_prefix_cache_skips_prefill_bitwise(arch):
+    """A second request sharing an L-token prefix performs ZERO prefill
+    forward passes over those L tokens (step-count instrumentation) and its
+    greedy stream is BITWISE identical to a cold-cache run — gqa and mla,
+    paged pools."""
+    cfg = _cfg(arch)
+    params = _params(cfg)
+    rng = np.random.RandomState(2)
+    prompt = list(map(int, rng.randint(0, cfg.vocab, 24)))
+
+    cold_eng = _cache_engine(cfg, params, False)
+    cold1 = _wave(cold_eng, [prompt])
+    cold2 = _wave(cold_eng, [prompt])          # same engine, cache off
+
+    hot_eng = _cache_engine(cfg, params, True)
+    hot1 = _wave(hot_eng, [prompt])
+    assert hot1 == cold1                        # empty cache: identical
+    steps0 = hot_eng.stats["prefill_steps"]
+    tokens0 = hot_eng.stats["prefill_tokens"]
+    hot2 = _wave(hot_eng, [prompt])
+    assert hot2 == cold2                        # BITWISE parity, hot
+    # the full 24-token prompt caps at 23 matched tokens (the last prompt
+    # token is always computed for its logits): exactly ONE prefill forward
+    # over exactly ONE token — zero forward passes over the L=23 prefix
+    assert hot_eng.stats["prefill_steps"] - steps0 == 1
+    assert hot_eng.stats["prefill_tokens"] - tokens0 == 1
+    assert hot_eng.stats["prefill_skipped_tokens"] == 23
+    assert hot_eng.stats["prefix_hits"] == 1
+
+
+def test_prefix_cache_cow_at_divergence():
+    """A prompt diverging INSIDE a cached block reuses the in-block common
+    prefix via copy-on-write and only prefills from the divergence on."""
+    cfg = _cfg("yi_9b")
+    params = _params(cfg)
+    rng = np.random.RandomState(3)
+    base = list(map(int, rng.randint(0, cfg.vocab, 24)))
+    fork = base[:10] + list(map(int, rng.randint(0, cfg.vocab, 14)))
+
+    cold = _wave(_cache_engine(cfg, params, False), [fork])
+    hot_eng = _cache_engine(cfg, params, True)
+    _wave(hot_eng, [base])                      # prime the cache
+    t0 = hot_eng.stats["prefill_tokens"]
+    hot = _wave(hot_eng, [fork])
+    assert hot == cold                          # bitwise despite COW
+    # 10 matched = 2 full aliased blocks (bs=4) + 2 tokens COW'd: prefill
+    # covers exactly the 14 unmatched tokens
+    assert hot_eng.stats["prefill_tokens"] - t0 == 14
+    assert hot_eng.stats["prefill_skipped_tokens"] == 10
+
+
+def test_prefix_cache_excluded_on_windowed_lattn():
+    """Sliding-window stacks reclaim blocks mid-sequence, so their prefixes
+    are unshareable: the engine must run with cache=None and emit exactly
+    the cache-off streams."""
+    cfg = _lattn_cfg()
+    params = _params(cfg)
+    rng = np.random.RandomState(4)
+    prompt = list(map(int, rng.randint(0, cfg.vocab, 12)))
+    hot_eng = _cache_engine(cfg, params, True, max_len=32)
+    assert hot_eng.cache is None                # excluded, not an error
+    cold_eng = _cache_engine(cfg, params, False, max_len=32)
+    assert _wave(hot_eng, [prompt]) == _wave(cold_eng, [prompt])
+    assert _wave(hot_eng, [prompt]) == _wave(cold_eng, [prompt])
+    assert hot_eng.stats["prefill_skipped_tokens"] == 0
+
+
+def test_prefix_cache_excluded_on_recurrent_state():
+    """wkv/lru state integrates the whole prefix into O(1) slot state that
+    blocks cannot reconstruct — recurrent archs must be excluded too."""
+    cfg = _cfg("rwkv6_7b")
+    params = _params(cfg)
+    eng = _cache_engine(cfg, params, True)
+    assert eng.cache is None
+
+
+def test_prefix_cache_eviction_under_pressure():
+    """When the pool runs dry, unpinned cached prefixes are evicted LRU and
+    their blocks reused; every request still completes and the pool fully
+    reclaims afterwards."""
+    cfg = _cfg("yi_9b")
+    params = _params(cfg)
+    rng = np.random.RandomState(5)
+    prompts = [list(map(int, rng.randint(0, cfg.vocab, 16)))
+               for _ in range(4)]
+    # 16 blocks of 4 = 64 positions total; each request needs ~5-6 blocks,
+    # so caching all four retired streams MUST evict earlier entries
+    eng = _cache_engine(cfg, params, True, n_slots=2, max_len=32,
+                        n_blocks=16)
+    for p in prompts:
+        got = _wave(eng, [p])
+        assert len(got[0]) == 4
+    assert eng.cache.stats["evicted_blocks"] > 0
+    # conservation: cached + free == all (no slot is live)
+    assert (eng.pool.free_block_count + eng.cache.cached_blocks()
+            == eng.pool.n_blocks)
+    # hot reuse still correct after the evictions
+    cold = _wave(_cache_engine(cfg, params, False, n_slots=2, max_len=32,
+                               n_blocks=16), [prompts[-1]])
+    assert _wave(eng, [prompts[-1]]) == cold
+
+
+def test_prefix_cache_quartet2_deterministic():
+    """Quantizing schemes are chunk-coupled (shared activation absmax), so
+    hot runs are not bit-compared to cold — but they must be deterministic
+    run-to-run (docs/CONVENTIONS.md §3)."""
+    cfg = _cfg("yi_9b")
+    params = _params(cfg)
+    rng = np.random.RandomState(6)
+    prompt = list(map(int, rng.randint(0, cfg.vocab, 20)))
+
+    def run_twice():
+        eng = _cache_engine(cfg, params, True, scheme="quartet2",
+                            prequant=True)
+        return _wave(eng, [prompt]) + _wave(eng, [prompt])
+
+    assert run_twice() == run_twice()
+
+
+def test_prefix_cache_spec_decode_composes():
+    """Speculative decoding + prefix cache: the draft pool never aliases
+    (it catches up over the skipped prefix), and the emitted stream stays
+    bitwise equal to the plain engine."""
+    cfg = _cfg("yi_9b")
+    params = _params(cfg)
+    rng = np.random.RandomState(7)
+    prompt = list(map(int, rng.randint(0, cfg.vocab, 24)))
+    plain = _cache_engine(cfg, params, False)
+    ref1, ref2 = _wave(plain, [prompt]), _wave(plain, [prompt])
+    eng = _cache_engine(cfg, params, True, spec_k=2, draft_layers=1)
+    assert _wave(eng, [prompt]) == ref1
+    assert _wave(eng, [prompt]) == ref2
+    assert eng.stats["prefill_skipped_tokens"] == 23
+    assert eng.stats["spec_rounds"] > 0

@@ -203,3 +203,103 @@ def test_sharded_quartet2_deterministic():
     b, _ = _streams(cfg, params, prompts, mesh=mesh, scheme="quartet2",
                     prequant=True)
     assert a == b
+
+
+# --------------------------------------------------------------------------
+# slot-affine prefix cache + shard-occupancy placement (ISSUE 5)
+# --------------------------------------------------------------------------
+
+@needs_two_devices
+def test_sharded_prefix_cache_bitwise_and_affine():
+    """Prefix reuse on the sharded engine: the hot wave skips the shared
+    prefix's prefill, streams stay BITWISE equal to the cache-off sharded
+    engine, and the slot-affinity invariant holds throughout (adopted
+    blocks home on the adopting slot's shard)."""
+    cfg = _gqa_cfg()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(2)
+    prompt = list(map(int, rng.randint(0, cfg.vocab, 24)))
+    mesh = make_serve_mesh(2, 1)
+
+    def waves(prefix_cache):
+        eng = ServeEngine(cfg, params, EngineConfig(
+            n_slots=2, max_len=64, block_size=4, prefill_chunk=8,
+            scheme="bf16", prequant=False, mesh=mesh,
+            prefix_cache=prefix_cache))
+        out = []
+        for _ in range(2):
+            eng.submit(Request(prompt=prompt, max_new=4))
+            out.append([r.tokens for r in eng.run()][0])
+        return out, eng
+
+    cold, _ = waves(False)
+    hot, eng = waves(True)
+    assert hot == cold
+    assert eng.stats["prefill_skipped_tokens"] == 23
+    pool = eng.pool
+    bps = pool.blocks_per_shard
+    for slot in range(pool.n_slots):
+        sh = pool.shard_of_slot(slot)
+        assert all(b // bps == sh for b in pool._owned[slot])
+    # cached nodes record their home shard; all holds conserve
+    assert (pool.free_block_count
+            + sum(1 for b in range(pool.n_blocks) if pool.refcount(b) > 0)
+            == pool.n_blocks)
+
+
+@needs_two_devices
+def test_sharded_prefix_unreachable_from_other_shard():
+    """A prefix cached on shard 0 is NOT reusable by a slot homed on shard
+    1: when shard 0 has no free slot the request admits cold elsewhere —
+    correct stream, zero additional skip."""
+    cfg = _gqa_cfg()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(3)
+    prompt = list(map(int, rng.randint(0, cfg.vocab, 20)))
+    mesh = make_serve_mesh(2, 1)
+    eng = ServeEngine(cfg, params, EngineConfig(
+        n_slots=2, max_len=64, block_size=4, prefill_chunk=8,
+        scheme="bf16", prequant=False, mesh=mesh, prefix_cache=True))
+    eng.submit(Request(prompt=prompt, max_new=3))
+    ref = [r.tokens for r in eng.run()][0]      # cached on shard 0
+    skipped0 = eng.stats["prefill_skipped_tokens"]
+    # occupy shard 0's only slot with a long request, then resubmit the
+    # shared prompt: it must land on shard 1 WITHOUT the cached prefix
+    blocker = eng.submit(Request(prompt=prompt, max_new=12))
+    shared = eng.submit(Request(prompt=prompt, max_new=3))
+    eng.step()  # blocker admitted to slot 0 (shard 0, prefix reuse)...
+    res = {r.req_id: r.tokens for r in eng.run()}
+    assert res[shared] == ref                   # bitwise despite cold admit
+    # only the BLOCKER reused the shard-0 prefix; the cross-shard request
+    # re-prefilled everything
+    assert eng.stats["prefill_skipped_tokens"] == skipped0 + 19
+    pool = eng.pool
+    bps = pool.blocks_per_shard
+    for slot in range(pool.n_slots):
+        assert all(b // bps == pool.shard_of_slot(slot)
+                   for b in pool._owned[slot])
+
+
+@needs_two_devices
+def test_shard_occupancy_aware_placement():
+    """_admit places a new request on the shard with the most EFFECTIVE free
+    blocks (free minus outstanding commitments), not the first free slot:
+    after one admission reserves most of shard 0, the next request homes on
+    shard 1 even though a shard-0 slot is still free."""
+    cfg = _gqa_cfg()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    mesh = make_serve_mesh(2, 1)
+    eng = ServeEngine(cfg, params, EngineConfig(
+        n_slots=4, max_len=64, block_size=4, prefill_chunk=8,
+        scheme="bf16", prequant=False, mesh=mesh))
+    # slots 0-1 home on shard 0, slots 2-3 on shard 1
+    eng.submit(Request(prompt=[1] * 16, max_new=31))   # 47 tok ~ 12 blocks
+    eng._admit()
+    assert eng.slots[0].state != "free"                # ties break low: shard 0
+    eng.submit(Request(prompt=[1] * 8, max_new=4))
+    eng._admit()
+    # shard 0 still has a free SLOT, but shard 1 has more effective free
+    # blocks — occupancy-aware placement picks slot 2
+    assert eng.slots[2].state != "free"
+    assert eng.slots[1].state == "free"
+    eng.run()
