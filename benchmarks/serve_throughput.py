@@ -72,6 +72,7 @@ import numpy as np
 
 from benchmarks import common
 from benchmarks.common import bench_cfg
+from repro.configs import registry
 from repro.models import lm
 from repro.serve.decode import greedy_generate
 from repro.serve.engine import EngineConfig, Request, ServeEngine
@@ -97,10 +98,10 @@ def _seed_loop_toks(cfg, params, prompts, max_new, scheme):
 
 
 def _engine_toks(cfg, params, prompts, max_new, scheme, prequant,
-                 arrivals=None):
+                 arrivals=None, obs=None):
     econf = EngineConfig(n_slots=len(prompts) if arrivals is None else 4,
                          max_len=128, prefill_chunk=16, paged=True,
-                         prequant=prequant, scheme=scheme)
+                         prequant=prequant, scheme=scheme, obs=obs)
     eng = ServeEngine(cfg, params, econf)
     if arrivals is None:
         for p in prompts:
@@ -316,7 +317,57 @@ def _latency_policy_row(cfg, params, scheme, detail, smoke):
             f"deadline_met={met:.2f} requests={n_req}")
 
 
-def _emit_bench_json(decode_paths, rows, smoke):
+def _obs_section(obs, st):
+    """Observed (registry-backed) counters + trace latency aggregates for
+    the instrumented engine row, cross-checked against the legacy stats
+    surface — `counters_match` pins that the two views agree exactly."""
+    label = obs.engine_label
+    reg = obs.registry
+    observed = {
+        "decode_tokens": reg.value("serve_engine_decode_tokens_total",
+                                   engine=label),
+        "prefill_tokens": reg.value("serve_engine_prefill_tokens_total",
+                                    engine=label),
+        "finished": reg.value("serve_engine_finished_total", engine=label),
+        "ticks": reg.value("serve_engine_ticks_total", engine=label),
+    }
+    agg = obs.trace_sink.aggregates()
+    return {
+        "counters": {k: int(v) for k, v in observed.items()},
+        "counters_match": all(int(observed[k]) == st[k] for k in observed),
+        "ttft_ms": _ms(agg["ttft_s"]),
+        "queue_wait_ms": _ms(agg["queue_wait_s"]),
+        "decode_tok_ms": _ms(agg["decode_tok_s"]),
+        "retired_traces": agg["retired"],
+    }
+
+
+def _ms(p):
+    return {k: (round(v * 1e3, 3) if k != "count" else v)
+            for k, v in p.items()}
+
+
+def _quant_health(smoke):
+    """NVFP4 quantization-accuracy scoreboard (obs/quant_probe.py) over the
+    llama_200m weight sites: MS-EDEN vs SR relative MSE plus scale-
+    saturation/clip fractions per site — the paper's Table-1 comparison on
+    real init weights, alongside the throughput rows."""
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.quant_probe import QuantProbe
+    cfg = registry.get("llama_200m").reduced()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    probe = QuantProbe(scheme="quartet2", max_sites=4 if smoke else 8,
+                       registry=MetricsRegistry())
+    sites = probe.probe_params(params, phase="prequant")
+    out = {"config": "llama_200m(reduced)", "scheme": "quartet2",
+           "sites": {}}
+    for name, vals in sites.items():
+        out["sites"][name] = {k: round(v, 6) for k, v in vals.items()}
+    return out
+
+
+def _emit_bench_json(decode_paths, rows, smoke, observability=None,
+                     quant_health=None):
     """BENCH_serve.json at the repo root: the serving bench trajectory
     artifact future PRs regress against."""
     payload = {
@@ -327,6 +378,10 @@ def _emit_bench_json(decode_paths, rows, smoke):
         "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
                  for n, us, d in rows],
     }
+    if observability is not None:
+        payload["observability"] = observability
+    if quant_health is not None:
+        payload["quant_health"] = quant_health
     path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         os.pardir, "BENCH_serve.json")
     with open(os.path.normpath(path), "w") as f:
@@ -395,8 +450,14 @@ def run(quick: bool = True):
         rows.append(("serve/engine_requant", 1e6 / rq_tps,
                      f"tok_s={rq_tps:.1f} batch={batch}"))
 
-    pq_tps, _ = _engine_toks(cfg, params, prompts, max_new, scheme,
-                             prequant=True)
+    # instrumented run: the prequant row doubles as the observability
+    # smoke — BENCH carries the OBSERVED registry counters (cross-checked
+    # against legacy stats) and the per-request TTFT/queue-wait aggregates
+    from repro.obs import Instrumentation, MetricsRegistry
+    obs = Instrumentation(registry=MetricsRegistry())
+    pq_tps, pq_st = _engine_toks(cfg, params, prompts, max_new, scheme,
+                                 prequant=True, obs=obs)
+    observability = _obs_section(obs, pq_st)
     rows.append(("serve/engine_prequant", 1e6 / pq_tps,
                  f"tok_s={pq_tps:.1f} batch={batch} "
                  f"speedup_vs_seed={pq_tps / seed_tps:.2f}x"))
@@ -444,5 +505,6 @@ def run(quick: bool = True):
         rows.append(("serve/engine_poisson", 1e6 / max(po_tps, 1e-9),
                      f"tok_s={po_tps:.1f} requests={n_req} "
                      f"slots=4 finished={st['finished']}"))
-    _emit_bench_json(dp_detail, rows, smoke)
+    _emit_bench_json(dp_detail, rows, smoke, observability=observability,
+                     quant_health=_quant_health(smoke))
     return rows

@@ -84,6 +84,14 @@ def main():
                          "the cache, then the N requests alias its blocks "
                          "read-only and skip that prefill — reports prefill "
                          "tokens skipped and the hit rate")
+    ap.add_argument("--metrics", action="store_true",
+                    help="run with the observability layer enabled "
+                         "(obs/instrumentation.py): report TTFT/queue-wait "
+                         "percentiles and print the Prometheus-text metrics "
+                         "snapshot at exit")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="dump per-request trace spans as JSONL "
+                         "(implies --metrics)")
     args = ap.parse_args()
 
     backend = jax.default_backend().upper()
@@ -116,12 +124,16 @@ def main():
     if args.data_shards > 1:
         from repro.launch.mesh import make_serve_mesh
         mesh = make_serve_mesh(args.data_shards, 1)
+    obs = None
+    if args.metrics or args.trace_out:
+        from repro.obs import Instrumentation, MetricsRegistry
+        obs = Instrumentation(registry=MetricsRegistry())
     eng = ServeEngine(cfg, params, EngineConfig(
         n_slots=b, max_len=max_len, prefill_chunk=16,
         paged=not args.dense, prequant=not args.no_prequant,
         scheme=args.scheme, spec_k=args.spec_k, draft_layers=draft_layers,
         paged_kernel=(None if args.paged_kernel is None
-                      else args.paged_kernel == "on"), mesh=mesh))
+                      else args.paged_kernel == "on"), mesh=mesh, obs=obs))
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k)
     ids = [eng.submit(Request(prompt=p, max_new=args.tokens, sampling=sp))
            for p in prompts]
@@ -148,6 +160,24 @@ def main():
     print(f"end-to-end: {wall*1e3:.0f}ms, slots={b}, "
           f"pool blocks free {eng.pool.free_block_count}/{eng.pool.n_blocks}")
     print("sample token ids:", results[ids[0]].tokens[:12])
+
+    if obs is not None:
+        agg = obs.trace_sink.aggregates()
+        for name, label in (("queue_wait_s", "queue wait"),
+                            ("ttft_s", "TTFT"),
+                            ("decode_tok_s", "decode/token")):
+            p = agg[name]
+            if p.get("count"):
+                print(f"{label}: p50 {p['p50']*1e3:.1f}ms "
+                      f"p95 {p['p95']*1e3:.1f}ms p99 {p['p99']*1e3:.1f}ms "
+                      f"(n={p['count']})")
+        if args.trace_out:
+            n = obs.trace_sink.write_jsonl(args.trace_out)
+            print(f"wrote {n} trace events "
+                  f"({len(obs.trace_sink.traces)} requests) to "
+                  f"{args.trace_out}")
+        print("--- metrics snapshot (Prometheus text) ---")
+        print(obs.prometheus(), end="")
 
 
 def shared_prefix_demo(cfg, params, args, rng, backend):

@@ -1,0 +1,210 @@
+"""Sampled NVFP4 quantization-health probe.
+
+Low-precision pre-training stays on-curve only while quantization error
+stays in regime — NVFP4 training reports track per-site error, block-scale
+saturation, and outlier behavior continuously. This probe taps the SAME
+quantizers the hot paths use (core/quant.py forward kinds, core/ms_eden.py
+and `quant_sr` for the backward estimators) on a rotating sample of weight
+sites and reports, per site:
+
+  - relative quantization MSE (mean sq. reconstruction error / signal
+    power) for the scheme's forward weight quantizer, for MS-EDEN (paper
+    Alg. 1, reconstructed in ORIGINAL space via the inverse rotation), and
+    for plain SR over the same rotated tensor — the paper's Table 1
+    comparison, live on real weights;
+  - e4m3 block-scale saturation (fraction of group scales at the E4M3 max,
+    448) and element clip fraction (|x| beyond the FP4 grid reach of its
+    group scale — MS-EDEN's s* = (1/0.93)·6·(16/17) clips ~0.7% of a
+    Gaussian BY DESIGN, so a healthy value is small-but-nonzero);
+  - RHT outlier mass: the energy fraction carried by post-rotation
+    elements beyond 4x the tensor RMS (the rotation should have crushed
+    heavy tails — growth here means the Hadamard block no longer mixes the
+    outlier directions).
+
+Overhead discipline (docs/CONVENTIONS.md §6): the probe runs at the HOST
+step boundary — `Trainer` calls it every `every_n` steps, `prequantize`
+once per engine build — never inside a jitted body, and the single
+`jax.device_get` per probe is the only host sync it adds. Disabled is the
+default and provably free: `Trainer.probe = None` costs one `is None` test
+per step; `every_n = 0` makes `should_sample` constant-False (manual
+`probe_params` calls still work, which is how prequant uses it).
+
+Site sampling is deterministic: sites sort by parameter path and rotate
+with the step counter, so run N and a resumed run N' probe identical
+(site, layer) choices — probe output diffs are signal, not sampling noise.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats as F
+from repro.core import ms_eden as M
+from repro.core import quant as Q
+from repro.core import rht as R
+from repro.core import schemes as S
+from repro.obs.metrics import MetricsRegistry, default_registry
+from repro.serve.prequant import QUANT_KEYS, _leaf_key
+
+#: forward weight-quantizer kinds -> quantizer (core/schemes.py fwd_w)
+_FWD = {
+    "rtn": Q.quant_rtn,
+    "fos": Q.quant_four_over_six,
+    "square": Q.quant_square_block,
+}
+
+
+def _mse_rel(x, rec):
+    return jnp.mean((rec - x) ** 2) / (jnp.mean(x * x) + 1e-30)
+
+
+def _clip_frac(x, qt):
+    """Fraction of elements beyond the FP4 grid reach of their group scale
+    (measured against the pre-snap tensor in the quantizer's own space)."""
+    denom = jnp.repeat(qt.scales, F.GROUP, axis=-1) * qt.gscale
+    clipped = jnp.abs(x) > F.FP4_MAX * denom
+    return jnp.mean(jnp.where(denom > 0, clipped, False).astype(jnp.float32))
+
+
+def _sat_frac(qt):
+    return jnp.mean((qt.scales >= F.FP8_MAX).astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("fwd_kind",))
+def _health(w, rht_key, sr_key, fwd_kind: str):
+    """All health scalars for one 2D site, one device round-trip.
+
+    MS-EDEN and SR are measured in ORIGINAL space (reconstruction through
+    the inverse rotation) so the two backward estimators are directly
+    comparable — the rotated-space error equals the original-space error
+    only up to the rotation, and SR without RHT would face a different
+    input distribution entirely.
+    """
+    x = w.astype(jnp.float32)
+    out = {}
+    if fwd_kind != "none":
+        qt = _FWD[fwd_kind](x)
+        out["fwd_mse_rel"] = _mse_rel(x, Q.dequant(qt))
+        out["fwd_scale_sat_frac"] = _sat_frac(qt)
+        out["fwd_clip_frac"] = _clip_frac(x, qt)
+    x_rot = R.rht(x, rht_key)
+    me = M.ms_eden(x, rht_key, sr_key)
+    out["ms_eden_mse_rel"] = _mse_rel(x, M.ms_eden_dequant(me, rotated=False))
+    out["ms_eden_scale_sat_frac"] = _sat_frac(me.qt)
+    out["ms_eden_clip_frac"] = _clip_frac(x_rot, me.qt)
+    qs = Q.quant_sr(x_rot, sr_key)
+    out["sr_mse_rel"] = _mse_rel(x, R.rht_inv(Q.dequant(qs), rht_key))
+    out["sr_scale_sat_frac"] = _sat_frac(qs)
+    out["sr_clip_frac"] = _clip_frac(x_rot, qs)
+    energy = x_rot * x_rot
+    rms = jnp.sqrt(jnp.mean(energy) + 1e-30)
+    out["rht_outlier_mass"] = (
+        jnp.sum(jnp.where(jnp.abs(x_rot) > 4.0 * rms, energy, 0.0))
+        / (jnp.sum(energy) + 1e-30))
+    return out
+
+
+class QuantProbe:
+    """Rotating-sample quantization-health tap over a params pytree.
+
+    `every_n = 0` (default): never auto-samples (`should_sample` is False);
+    explicit `probe_params` calls — the prequant path — still probe.
+    """
+
+    def __init__(self, scheme: str = "quartet2", every_n: int = 0,
+                 max_sites: int = 8, base_seed: int = 0,
+                 registry: MetricsRegistry | None = None):
+        self.scheme = scheme
+        self.fwd_kind = S.get(scheme).fwd_w
+        self.every_n = every_n
+        self.max_sites = max_sites
+        self.base_seed = base_seed
+        self.registry = registry if registry is not None else default_registry()
+        labels = ("site", "phase", "quantizer")
+        self._mse = self.registry.gauge(
+            "nvfp4_quant_mse_rel",
+            "relative quantization MSE at a sampled weight site", labels)
+        self._sat = self.registry.gauge(
+            "nvfp4_scale_saturation_frac",
+            "fraction of e4m3 group scales at the E4M3 max", labels)
+        self._clip = self.registry.gauge(
+            "nvfp4_clip_frac",
+            "fraction of elements beyond their group's FP4 reach", labels)
+        self._outlier = self.registry.gauge(
+            "nvfp4_rht_outlier_mass",
+            "post-RHT energy fraction beyond 4x RMS", ("site", "phase"))
+        self._samples = self.registry.counter(
+            "nvfp4_probe_samples_total", "per-site probe evaluations",
+            ("phase",))
+
+    def should_sample(self, step: int) -> bool:
+        return self.every_n > 0 and step % self.every_n == 0
+
+    # ---- site discovery --------------------------------------------------
+
+    @staticmethod
+    def sites(params) -> list[tuple[str, jax.Array]]:
+        """Deterministic (path, leaf) list of quantized weight sites: the
+        QUANT_KEYS leaves prequant/qlinear feed through NVFP4, 2D or
+        stacked, raw (unpacked) arrays only, sorted by path."""
+        tree = params.get("stages", params) if isinstance(params, dict) else params
+        found: list[tuple[str, jax.Array]] = []
+
+        def visit(path, leaf):
+            if (hasattr(leaf, "ndim") and leaf.ndim >= 2
+                    and not hasattr(leaf, "codes_packed")
+                    and _leaf_key(path) in QUANT_KEYS):
+                name = "/".join(str(getattr(p, "key", getattr(p, "name", p)))
+                                for p in path)
+                found.append((name, leaf))
+            return leaf
+
+        jax.tree_util.tree_map_with_path(visit, tree)
+        found.sort(key=lambda kv: kv[0])
+        return found
+
+    # ---- probing ---------------------------------------------------------
+
+    def probe_params(self, params, step: int = 0,
+                     phase: str = "train") -> dict:
+        """Probe up to `max_sites` sites (rotating with `step`), record the
+        gauges, and return {site: {metric: float}}. One `device_get`."""
+        sites = self.sites(params)
+        if not sites:
+            return {}
+        k = min(self.max_sites, len(sites))
+        period = max(self.every_n, 1)
+        start = ((step // period) * k) % len(sites)
+        key = jax.random.fold_in(jax.random.PRNGKey(self.base_seed), step)
+        pending = {}
+        for j in range(k):
+            name, leaf = sites[(start + j) % len(sites)]
+            if leaf.shape[-1] % F.GROUP:
+                continue  # not NVFP4-groupable; qlinear pads, the probe skips
+            mat = leaf
+            if leaf.ndim > 2:
+                flat = leaf.reshape((-1, *leaf.shape[-2:]))
+                mat = flat[(step // period + j) % flat.shape[0]]
+            site_key = jax.random.fold_in(key, j)
+            rht_key, sr_key = jax.random.split(site_key)
+            pending[name] = _health(mat, rht_key, sr_key, self.fwd_kind)
+        results = jax.device_get(pending)  # the probe's ONLY host sync
+        for name, vals in results.items():
+            out = {m: float(v) for m, v in vals.items()}
+            results[name] = out
+            for metric, v in out.items():
+                if metric == "rht_outlier_mass":
+                    self._outlier.labels(site=name, phase=phase).set(v)
+                    continue
+                quantizer, field = metric.split("_", 1)
+                if quantizer == "ms":  # ms_eden_*
+                    quantizer, field = "ms_eden", metric[len("ms_eden_"):]
+                gauge = {"mse_rel": self._mse,
+                         "scale_sat_frac": self._sat,
+                         "clip_frac": self._clip}[field]
+                gauge.labels(site=name, phase=phase, quantizer=quantizer).set(v)
+            self._samples.labels(phase=phase).inc()
+        return results

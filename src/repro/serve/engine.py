@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.obs.instrumentation import NULL, legacy_stats_dict
 from repro.serve import decode as serve_decode
 from repro.serve import spec_decode
 from repro.serve.kv_pool import KVPool
@@ -81,6 +82,11 @@ class RequestResult:
     arrival_s: float = 0.0
     finish_s: float = 0.0
     deadline_s: float | None = None
+    # filled from the request's trace when observability is enabled
+    # (EngineConfig.obs); None otherwise
+    queue_wait_s: float | None = None   # submit -> slot admission
+    ttft_s: float | None = None         # submit -> first sampled token
+    decode_tok_s: float | None = None   # mean per-token decode latency
 
     @property
     def latency_s(self) -> float:
@@ -133,6 +139,12 @@ class EngineConfig:
     # which reproduces the pre-policy engine exactly; LatencyPolicy adds
     # priority/deadline admission, prefill preemption, and aging.
     scheduler: Any = None
+    # observability hook (obs/instrumentation.py Instrumentation). None
+    # disables ALL instrumentation beyond the legacy stats dict — the
+    # engine hot path then costs one `.enabled` attribute read per hook
+    # site and token streams are bitwise identical to the uninstrumented
+    # engine (tests/test_obs.py).
+    obs: Any = None
 
     def resolved_paged_kernel(self) -> bool:
         if self.paged_kernel is None:
@@ -163,8 +175,12 @@ class ServeEngine:
         self.cfg = cfg
         self.econf = econf or EngineConfig()
         e = self.econf
-        self.params = (prequantize(params, cfg, e.scheme) if e.prequant
-                       else params)
+        # observability: resolved FIRST so prequantization can report its
+        # weight-quantization health through the probe
+        self.obs = e.obs if e.obs is not None else NULL
+        probe = self.obs.quant_probe if self.obs.enabled else None
+        self.params = (prequantize(params, cfg, e.scheme, probe=probe)
+                       if e.prequant else params)
         self.paged_kernel = e.resolved_paged_kernel()
         if self.paged_kernel and not e.paged:
             raise ValueError("paged_kernel=True requires paged=True (the "
@@ -242,14 +258,23 @@ class ServeEngine:
                 self.cache = PrefixCache(self.pool)
         from repro.serve.scheduler import FifoPolicy
         self.sched = e.scheduler if e.scheduler is not None else FifoPolicy()
-        self.stats = {"prefill_s": 0.0, "decode_s": 0.0,
-                      "prefill_tokens": 0, "decode_tokens": 0,
-                      "decode_steps": 0, "ticks": 0,
-                      "admitted": 0, "rejected": 0, "finished": 0,
-                      "spec_rounds": 0, "draft_tokens": 0,
-                      "accepted_tokens": 0,
-                      "prefill_steps": 0, "prefill_skipped_tokens": 0,
-                      "prefix_hits": 0}
+        # stats store: a plain dict when observability is off (the legacy
+        # layout, zero overhead), registry-backed counters behind the same
+        # MutableMapping surface when on — `engine.stats` is a property so
+        # every existing caller (`stats[k] += n`, bench reset loops,
+        # snapshot comparisons) works against either
+        if self.obs.enabled:
+            self._stats = self.obs.stats_view()
+            self.pool.obs = self.obs
+            if self.cache is not None:
+                self.cache.obs = self.obs
+        else:
+            self._stats = legacy_stats_dict()
+
+    @property
+    def stats(self):
+        """Engine counters (legacy dict surface; see __init__)."""
+        return self._stats
 
     # ------------------------------------------------------------------
     # public API
@@ -259,12 +284,16 @@ class ServeEngine:
         """Queue a request; raises QueueFull when at capacity."""
         if len(self.queue) >= self.econf.max_queue:
             self.stats["rejected"] += 1
+            if self.obs.enabled:
+                self.obs.on_reject(request, "queue_full", time.perf_counter())
             raise QueueFull(f"queue at capacity ({self.econf.max_queue})")
         total = len(request.prompt) + request.max_new + self._margin
         if not self.pool.can_ever_admit(total, self._max_growth):
             # reject now: an unservable request would head-of-line block the
             # FIFO forever (can_admit never becomes true)
             self.stats["rejected"] += 1
+            if self.obs.enabled:
+                self.obs.on_reject(request, "unservable", time.perf_counter())
             bound = (f"{self.pool.blocks_per_shard} blocks per shard "
                      f"(slot-affine, {self.pool.n_shards} shards)"
                      if self.pool.n_shards > 1
@@ -277,7 +306,43 @@ class ServeEngine:
         request.req_id = next(self._ids)
         request.arrival_s = time.perf_counter()
         self.queue.append(request)
+        if self.obs.enabled:
+            self.obs.on_submit(request, request.arrival_s)
         return request.req_id
+
+    def cancel(self, req_id: int) -> bool:
+        """Best-effort cancellation: remove a QUEUED request, or free the
+        slot of an in-flight one (its committed KV prefix is inserted into
+        the prefix cache first — the tokens were paid for; a resubmission
+        reuses them). Returns False when `req_id` is unknown (already
+        retired, rejected, or never submitted)."""
+        t = time.perf_counter()
+        for r in self.queue:
+            if r.req_id == req_id:
+                self.queue.remove(r)
+                self._matches.pop(req_id, None)
+                self.stats["cancelled"] += 1
+                if self.obs.enabled:
+                    self.obs.on_cancel(r, t)
+                return True
+        for i, s in enumerate(self.slots):
+            if s.req is not None and s.req.req_id == req_id:
+                if self.cache is not None:
+                    # same order as retirement: insert while the blocks are
+                    # still referenced, then drop this slot's pins
+                    stream = (s.req.prompt + s.generated)[:self.pool.length(i)]
+                    self.cache.insert(stream, i)
+                    if s.cache_nodes:
+                        self.cache.release(s.cache_nodes)
+                self.pool.release(i)
+                if self.draft is not None:
+                    self.draft.pool.release(i)
+                self.slots[i] = _Slot()
+                self.stats["cancelled"] += 1
+                if self.obs.enabled:
+                    self.obs.on_cancel(s.req, t)
+                return True
+        return False
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(s.state != FREE for s in self.slots)
@@ -303,11 +368,17 @@ class ServeEngine:
         self._admit()
         self._prefill_tick()
         finished = self._decode_tick()
+        if self.obs.enabled:
+            self.obs.on_tick(self)  # occupancy / pool / cache gauges
         return finished
 
     def _admit(self) -> None:
         for r in self.queue:
             r.queued_ticks += 1  # scheduler aging (LatencyPolicy)
+        if self.obs.enabled:
+            # queue depth / aging / slack gauges — the policy object knows
+            # its own urgency model, so IT reports (scheduler.py observe)
+            self.sched.observe(self.obs, self.queue, time.perf_counter())
         if not self.queue:
             return
         now = time.perf_counter()
@@ -396,6 +467,8 @@ class ServeEngine:
         self.slots[i] = _Slot(state=PREFILL, req=req, cursor=prefix_len,
                               prefix_len=prefix_len, cache_nodes=nodes)
         self.stats["admitted"] += 1
+        if self.obs.enabled:
+            self.obs.on_admit(req, i, prefix_len, time.perf_counter())
         if self.cache is not None:
             # hit-rate stats book exactly once per ADMITTED request (a
             # deferred request re-matches every tick; recording those
@@ -485,8 +558,15 @@ class ServeEngine:
             t0 = time.perf_counter()
             self.draft.pool.ensure(i, slot.draft_len + size)
             out = self.draft.forward(size, tokens, pos, active)
-            jax.block_until_ready(out)
-            self.stats["prefill_s"] += time.perf_counter() - t0
+            t_disp = time.perf_counter() - t0
+            # sync the draft CACHE writes too, not just the logits — an
+            # async cache write landing after the timer stops would be
+            # billed to whatever step happens to sync next
+            jax.block_until_ready((out, self.draft.pool.caches))
+            t_sync = time.perf_counter() - t0
+            self.stats["prefill_s"] += t_sync
+            if self.obs.enabled:
+                self.obs.on_prefill_step(t_disp, t_sync)
             slot.draft_len += size
             return  # bounded work: one chunk per tick
         remaining = len(prompt) - slot.cursor
@@ -507,10 +587,21 @@ class ServeEngine:
             # draft_layers of the full forward just computed)
             self.draft.pool.ensure(i, slot.cursor + size)
             self.draft.forward(size, tokens, pos, active)
-        jax.block_until_ready(logits)  # else async compute leaks into decode_s
-        self.stats["prefill_s"] += time.perf_counter() - t0
+        t_disp = time.perf_counter() - t0
+        # sync logits AND the cache pytrees: blocking on logits alone lets
+        # the (donated, in-place) KV scatter complete asynchronously AFTER
+        # the timer stops, under-reporting prefill_s and leaking device
+        # time into whichever step syncs next
+        sync = [logits, self.pool.caches]
+        if self.draft is not None:
+            sync.append(self.draft.pool.caches)
+        jax.block_until_ready(sync)
+        t_sync = time.perf_counter() - t0
+        self.stats["prefill_s"] += t_sync
         self.stats["prefill_tokens"] += size
         self.stats["prefill_steps"] += 1
+        if self.obs.enabled:
+            self.obs.on_prefill_step(t_disp, t_sync)
         slot.cursor += size
         slot.draft_len = slot.cursor
         if slot.cursor == len(prompt):
@@ -521,6 +612,8 @@ class ServeEngine:
             slot.length = len(prompt)
             slot.last_tok = tok
             slot.generated.append(tok)
+            if self.obs.enabled:
+                self.obs.on_first_token(slot.req, time.perf_counter())
         return  # bounded work: one chunk per tick
 
     def _decode_tick(self) -> list[RequestResult]:
@@ -532,11 +625,17 @@ class ServeEngine:
         for i in list(dec):
             slot = self.slots[i]
             if len(slot.generated) >= slot.req.max_new:
-                finished.append(RequestResult(
+                res = RequestResult(
                     slot.req.req_id, list(slot.req.prompt),
                     list(slot.generated), arrival_s=slot.req.arrival_s,
                     finish_s=time.perf_counter(),
-                    deadline_s=slot.req.deadline_s))
+                    deadline_s=slot.req.deadline_s)
+                if self.obs.enabled:
+                    # closes the trace and surfaces queue-wait / TTFT /
+                    # per-token decode latency on the result
+                    self.obs.on_retire(slot.req, res, len(slot.generated),
+                                       res.finish_s)
+                finished.append(res)
                 if self.cache is not None:
                     # cache the completed stream's full blocks, then drop
                     # this slot's pins — BEFORE release, while the blocks
@@ -557,10 +656,17 @@ class ServeEngine:
         if e.spec_k > 0:
             t0 = time.perf_counter()
             emitted = spec_decode.spec_round(self, dec)
-            jax.block_until_ready(jax.tree.leaves(self.pool.caches)[0])
-            self.stats["decode_s"] += time.perf_counter() - t0
+            t_disp = time.perf_counter() - t0
+            # the whole cache pytree, not just the first leaf: truncate
+            # rewrites tables but layer caches past leaf 0 may still have
+            # in-flight scatters when the timer stops
+            jax.block_until_ready(self.pool.caches)
+            t_sync = time.perf_counter() - t0
+            self.stats["decode_s"] += t_sync
             self.stats["decode_tokens"] += emitted
             self.stats["decode_steps"] += 1
+            if self.obs.enabled:
+                self.obs.on_decode_step(t_disp, t_sync)
             return finished
 
         tokens = np.zeros((e.n_slots, 1), np.int32)
@@ -575,10 +681,16 @@ class ServeEngine:
         t0 = time.perf_counter()
         logits = self._forward(1, tokens, pos, active)
         toks = self._sample(logits[:, -1])
-        jax.block_until_ready(toks)
-        self.stats["decode_s"] += time.perf_counter() - t0
+        t_disp = time.perf_counter() - t0
+        # sync tokens AND cache writes (same leak as prefill: the donated
+        # cache scatter may outlive the token fetch)
+        jax.block_until_ready((toks, self.pool.caches))
+        t_sync = time.perf_counter() - t0
+        self.stats["decode_s"] += t_sync
         self.stats["decode_tokens"] += len(dec)
         self.stats["decode_steps"] += 1
+        if self.obs.enabled:
+            self.obs.on_decode_step(t_disp, t_sync)
         for i in dec:
             slot = self.slots[i]
             slot.length += 1

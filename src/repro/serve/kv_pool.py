@@ -304,6 +304,10 @@ class KVPool:
         # set by the prefix cache: callable(shard, need) -> blocks freed into
         # that shard's list by evicting unpinned cached prefixes
         self.evict_hook = None
+        # observability hook (obs/instrumentation.py Instrumentation), set
+        # by the engine when EngineConfig(obs=...) is enabled; None costs
+        # one `is not None` test per allocation event
+        self.obs = None
         self._table_dev = None
         self._tables_dev = None
         self._copy_fn = None
@@ -340,6 +344,29 @@ class KVPool:
 
     def free_blocks_in_shard(self, shard: int) -> int:
         return len(self._frees[shard])
+
+    def utilization(self) -> dict:
+        """Host-side occupancy snapshot for the per-tick gauges
+        (obs/instrumentation.py): free blocks per shard, allocated blocks,
+        and internal fragmentation — token capacity sitting in allocated
+        blocks that no live position occupies (partial tail blocks plus
+        window-reclaim slack). Dense pools report zero blocks."""
+        if not self.paged:
+            return {"free_by_shard": [0] * self.n_shards,
+                    "allocated_blocks": 0, "frag_tokens": 0,
+                    "frag_ratio": 0.0}
+        free = [len(f) for f in self._frees]
+        cap = live = 0
+        for i in range(self.n_slots):
+            if not self._bound[i]:
+                continue
+            cap += len(self._owned[i]) * self.block_size
+            live += self._lengths[i] - self._live_from[i] * self.block_size
+        frag = max(cap - live, 0)
+        return {"free_by_shard": free,
+                "allocated_blocks": self.n_blocks - sum(free),
+                "frag_tokens": frag,
+                "frag_ratio": frag / cap if cap else 0.0}
 
     def effective_free_blocks(self, shard: int) -> int:
         """Free blocks of `shard` minus outstanding commitments of its
@@ -482,6 +509,7 @@ class KVPool:
             self._reclaim(slot)
         sh = self.shard_of_slot(slot)
         free = self._frees[sh]
+        taken = 0
         while self._alloc_upto[slot] < need:
             if not free and not (self.evict_hook is not None
                                  and self.evict_hook(sh, 1) > 0):
@@ -493,7 +521,10 @@ class KVPool:
             self._table[slot, self._alloc_upto[slot]] = blk
             owned.append(blk)
             self._alloc_upto[slot] += 1
+            taken += 1
             self._dirty()
+        if taken and self.obs is not None:
+            self.obs.on_pool_alloc(taken)
         self._lengths[slot] = max(self._lengths[slot], n_tokens)
 
     def _reclaim(self, slot: int) -> None:
@@ -517,6 +548,8 @@ class KVPool:
             self._table[slot, j] = self.sentinel
             self._owned[slot].remove(blk)
             self._decref(blk)
+        if self.obs is not None:
+            self.obs.on_pool_reclaim(first_live - self._live_from[slot])
         self._live_from[slot] = first_live
         self._dirty()
         # freed keys end at first_live*BS - 1; a truncate to n keeps windows
@@ -641,6 +674,8 @@ class KVPool:
             raise SlotError(f"block {block}: decref below zero (double free)")
         if self._ref[block] == 0:
             self._frees[self.shard_of_block(block)].append(block)
+            if self.obs is not None:
+                self.obs.on_pool_free(1)
 
     def incref(self, block: int) -> None:
         """Add an external (prefix-cache) hold on an allocated block."""
@@ -723,6 +758,9 @@ class KVPool:
         self._alloc_upto[slot] = j + 1
         self._copy_block_device(src, dst)
         self._dirty()
+        if self.obs is not None:
+            self.obs.on_pool_alloc(1)
+            self.obs.on_pool_cow()
         return dst
 
     def _copy_block_device(self, src: int, dst: int) -> None:

@@ -138,6 +138,9 @@ class PrefixCache:
         self.epoch = 0
         self.stats = {"lookups": 0, "hits": 0, "hit_tokens": 0,
                       "inserted_blocks": 0, "evicted_blocks": 0}
+        # observability hook (set by the engine with EngineConfig(obs=...));
+        # mirrors the stats events into registry counters
+        self.obs = None
         pool.evict_hook = self.evict
 
     @staticmethod
@@ -158,9 +161,12 @@ class PrefixCache:
         None for an admission that did not USE its match (e.g. the cached
         prefix homed on a shard with no usable slot): books a miss."""
         self.stats["lookups"] += 1
-        if match is not None and match.tokens:
+        hit = match is not None and match.tokens
+        if hit:
             self.stats["hits"] += 1
             self.stats["hit_tokens"] += match.tokens
+        if self.obs is not None:
+            self.obs.on_cache_record(bool(hit), match.tokens if hit else 0)
 
     def match(self, prompt: list[int]) -> Match:
         """Longest cached prefix of `prompt` (token-level; may end inside a
@@ -243,6 +249,8 @@ class PrefixCache:
             node = child
             added += 1
         self.stats["inserted_blocks"] += added
+        if self.obs is not None:
+            self.obs.on_cache_insert(added)
         if added:
             self.epoch += 1
         return added
@@ -280,6 +288,8 @@ class PrefixCache:
                 if freed >= need:
                     break
         self.stats["evicted_blocks"] += freed
+        if self.obs is not None:
+            self.obs.on_cache_evict(freed)
         if freed:
             self.epoch += 1
         return freed

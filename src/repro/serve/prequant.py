@@ -57,12 +57,19 @@ def _pack_stacked(leaf: jax.Array, kind: str) -> L.PackedQWeight:
     return L.PackedQWeight(*(a.reshape(*lead, *a.shape[1:]) for a in packed))
 
 
-def prequantize(params, cfg: ArchConfig, scheme: str):
+def prequantize(params, cfg: ArchConfig, scheme: str, probe=None):
     """Return a params pytree with decode-path weights replaced by
-    PackedQWeight stacks. No-op for non-weight-quantizing schemes."""
+    PackedQWeight stacks. No-op for non-weight-quantizing schemes.
+
+    `probe` (obs/quant_probe.py QuantProbe, optional) samples the RAW
+    weights' quantization health — per-site MSE, scale saturation, clip
+    fraction — before packing, so the one-time weight quantization every
+    serving run depends on is observable, not assumed."""
     sch = S.get(scheme)
     if sch.fwd_w == "none":
         return params
+    if probe is not None:
+        probe.probe_params(params, phase="prequant")
     kind = sch.fwd_w
 
     def maybe_pack(path, leaf):

@@ -60,6 +60,15 @@ class SchedulerPolicy:
         PREFILL state and non-empty. Returns the slot index to advance."""
         return candidates[0][0]
 
+    def observe(self, obs, queue, now: float) -> None:
+        """Per-tick scheduler telemetry (queue depth + aging), reported
+        through the engine's Instrumentation at the tick boundary — the
+        policy knows its own urgency model, so subclasses extend this
+        (LatencyPolicy adds deadline slack). Host-side only; never called
+        from inside a jitted body (docs/CONVENTIONS.md §6)."""
+        obs.queue_depth.set(len(queue))
+        obs.queue_age.set(max((r.queued_ticks for r in queue), default=0))
+
 
 class FifoPolicy(SchedulerPolicy):
     """Today's behavior, exactly: submission order, head-of-line blocking,
@@ -89,6 +98,13 @@ class LatencyPolicy(SchedulerPolicy):
             queue,
             key=lambda r: (-self.effective_priority(r), self._slack(r, now),
                            -getattr(r, "cached_hint", 0), r.req_id))
+
+    def observe(self, obs, queue, now: float) -> None:
+        super().observe(obs, queue, now)
+        slacks = [self._slack(r, now) for r in queue
+                  if r.deadline_s is not None]
+        if slacks:  # finite only: +Inf would poison the JSON exposition
+            obs.queue_slack.set(min(slacks))
 
     def pick_prefill(self, candidates, now: float) -> int:
         """Preemption point: the most urgent PREFILL slot gets the chunk

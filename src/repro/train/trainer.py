@@ -43,6 +43,11 @@ class Trainer:
     shard_id: int = 0
     num_shards: int = 1
     history: list = field(default_factory=list)
+    # optional quantization-health tap (obs/quant_probe.py QuantProbe):
+    # consulted at the HOST step boundary only (docs/CONVENTIONS.md §6 —
+    # never inside the jitted step). None (the default) costs one `is None`
+    # test per step: provably zero-overhead when disabled.
+    probe: object = None
     _stop: bool = field(default=False, repr=False)
 
     def __post_init__(self):
@@ -76,6 +81,13 @@ class Trainer:
                 state, metrics = self.train_step(state, batch)
                 loss = float(metrics["loss"])
                 dt = time.perf_counter() - t0
+
+                # sampled quantization-health tap (off unless a probe with
+                # every_n > 0 is attached); runs AFTER the step's own host
+                # sync so it never serializes the training dispatch
+                if self.probe is not None and self.probe.should_sample(step):
+                    self.probe.probe_params(state.params, step=step,
+                                            phase="train")
 
                 # straggler watchdog
                 ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt

@@ -44,6 +44,10 @@ _DIST_SUITES = {"test_dist.py", "test_pipeline.py", "test_serve_sharded.py"}
 # `-m scheduler` selects it, wired by path like the markers above.
 _SCHED_SUITES = {"test_scheduler.py"}
 
+# Observability suite (metrics registry, request tracing, engine telemetry,
+# quantization-health probe): `-m obs` selects it, wired by path.
+_OBS_SUITES = {"test_obs.py"}
+
 
 def pytest_collection_modifyitems(config, items):
     for item in items:
@@ -53,6 +57,8 @@ def pytest_collection_modifyitems(config, items):
             item.add_marker(pytest.mark.dist)
         if item.fspath.basename in _SCHED_SUITES:
             item.add_marker(pytest.mark.scheduler)
+        if item.fspath.basename in _OBS_SUITES:
+            item.add_marker(pytest.mark.obs)
 
 
 @pytest.fixture(scope="session")
