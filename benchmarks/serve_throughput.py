@@ -23,6 +23,13 @@ Rows (tok/s = generated tokens per wall-second of decode):
                              Pallas kernel (kernels/paged_attention.py;
                              interpret mode on CPU, so wall time here is NOT
                              the story — the modeled bytes/token column is)
+  serve/decode_kernel_q    — NVFP4-quantized pool (EngineConfig.kv_quant)
+                             through the packed-operand kernel twins: blocks
+                             stream as e2m1 codes + e4m3 scale bits (0.5625
+                             bytes/element vs 2 for bf16) and dequantize in
+                             VMEM, so modeled bytes/token drops to 0.28125x
+                             the bf16 kernel row (the acceptance bound is
+                             <= ~0.3x)
   serve/decode_prefix_cold — shared-system-prompt workload, prefix cache ON
                              but EMPTY (first wave): prices the cache's
                              bookkeeping overhead on a miss-only run
@@ -139,32 +146,40 @@ def _warm_and_reset(eng, prompt, max_new):
         eng.stats[k] = 0 if isinstance(eng.stats[k], int) else 0.0
 
 
-def _kv_bytes_per_position(cfg):
+# NVFP4 cache storage: packed e2m1 codes (0.5 B/elt) + one e4m3 scale byte
+# per 16-group = 0.5625 B/element, vs 2 for bf16 (core/formats.py codec)
+_KVQ_BYTES_PER_ELT = 0.5625
+
+
+def _kv_bytes_per_position(cfg, *, quantized=False):
     """K/V (or latent) cache bytes one token position occupies, summed over
     layers — the unit of decode-attention HBM traffic."""
+    elt = _KVQ_BYTES_PER_ELT if quantized else 2  # bf16
     per = 0
     for pattern, count in lm.layer_specs(cfg):
         for mixer, _ in pattern:
             if mixer in ("gqa", "lattn"):
-                per += count * 2 * cfg.n_kv_heads * cfg.hd * 2   # K+V bf16
+                per += count * 2 * cfg.n_kv_heads * cfg.hd * elt   # K+V
             elif mixer == "mla":
                 per += count * (cfg.mla.kv_lora_rank
-                                + cfg.mla.qk_rope_head_dim) * 2  # cc+kc bf16
+                                + cfg.mla.qk_rope_head_dim) * elt  # cc+kc
     return per
 
 
 def _modeled_bytes_per_token(cfg, path, mean_len, max_len):
     """Decode-attention bytes moved per emitted token under each data path.
 
-    dense  — scores run over the full (n_slots, max_len) cache: capacity.
-    gather — gather_view materializes a capacity-sized copy (pool read +
-             copy write) that the attention then reads again: 3x capacity.
-    kernel — the block table admits only backed, in-causal-range blocks:
-             the row's ACTUAL length, independent of pool capacity.
+    dense    — scores run over the full (n_slots, max_len) cache: capacity.
+    gather   — gather_view materializes a capacity-sized copy (pool read +
+               copy write) that the attention then reads again: 3x capacity.
+    kernel   — the block table admits only backed, in-causal-range blocks:
+               the row's ACTUAL length, independent of pool capacity.
+    kernel_q — same block admission, but blocks stream as packed NVFP4
+               bytes: 0.28125x the bf16 kernel row's traffic.
     """
-    per = _kv_bytes_per_position(cfg)
+    per = _kv_bytes_per_position(cfg, quantized=path == "kernel_q")
     return per * {"dense": max_len, "gather": 3 * max_len,
-                  "kernel": mean_len}[path]
+                  "kernel": mean_len, "kernel_q": mean_len}[path]
 
 
 def _decode_path_rows(cfg, params, prompts, max_new, scheme, max_len=64):
@@ -172,11 +187,12 @@ def _decode_path_rows(cfg, params, prompts, max_new, scheme, max_len=64):
     rows, detail = [], {}
     prompt_len = len(prompts[0])
     mean_len = prompt_len + (max_new + 1) / 2  # average backed length
-    for path in ("dense", "gather", "kernel"):
+    for path in ("dense", "gather", "kernel", "kernel_q"):
         econf = EngineConfig(n_slots=len(prompts), max_len=max_len,
                              prefill_chunk=16, paged=path != "dense",
                              prequant=True, scheme=scheme,
-                             paged_kernel=path == "kernel")
+                             paged_kernel=path in ("kernel", "kernel_q"),
+                             kv_quant=path == "kernel_q")
         eng = ServeEngine(cfg, params, econf)
         _warm_and_reset(eng, prompts[0], 2)
         for p in prompts:
@@ -190,11 +206,16 @@ def _decode_path_rows(cfg, params, prompts, max_new, scheme, max_len=64):
         detail[path] = {
             "tok_s": round(tps, 2),
             "modeled_bytes_per_token": int(bpt),
-            "kv_positions_touched": (mean_len if path == "kernel"
-                                     else max_len),
+            "kv_positions_touched": (mean_len if path in
+                                     ("kernel", "kernel_q") else max_len),
             "pool_capacity": max_len,
             "mean_seq_len": mean_len,
         }
+    # the tentpole bandwidth claim, regressed in BENCH_serve.json: packed
+    # blocks move <= ~0.3x the bf16 kernel row's bytes per emitted token
+    detail["kernel_q"]["bytes_ratio_vs_kernel"] = round(
+        detail["kernel_q"]["modeled_bytes_per_token"]
+        / detail["kernel"]["modeled_bytes_per_token"], 5)
     rows.append(_sharded_decode_row(cfg, params, prompts, max_new, scheme,
                                     detail, max_len=max_len))
     return rows, detail
@@ -366,8 +387,48 @@ def _quant_health(smoke):
     return out
 
 
+def _kv_quant_section(smoke):
+    """Cache-quantization scoreboard for BENCH_serve.json: storage bytes per
+    element and the cache-rounding relative MSE of the three candidate
+    rounding modes on pool-shaped N(0,1) bf16 blocks (table1_mse.py style).
+    The shipped cache codec is deterministic RTN (block immutability +
+    hot == cold need a value-pure encoding); MS-EDEN's rotated encoding
+    would need the inverse rotation inside the decode kernel, and plain SR
+    measures ~2.2x WORSE than RTN here (variance without an accumulation
+    loop to average over) — the scoreboard keeps all three honest across
+    PRs. tests/test_kv_quant.py pins the ordering ms_eden < rtn < sr."""
+    from repro.core import formats as F
+    from repro.core import ms_eden as ME
+    from repro.core import quant as Q
+    rng = np.random.RandomState(21)
+    n = (10 if smoke else 40) * 16
+    x = jnp.asarray(rng.randn(n, 128), jnp.bfloat16)
+    xf = np.asarray(x, np.float64)
+
+    def rel(d):
+        df = np.asarray(d, np.float64)
+        return float(np.mean((xf - df) ** 2) / np.mean(xf ** 2))
+
+    rtn = rel(F.nvfp4_cache_decode(*F.nvfp4_cache_encode(x),
+                                   dtype=jnp.float32))
+    sr = rel(Q.dequant(Q.quant_sr(x, jax.random.PRNGKey(1))))
+    keys = jax.random.split(jax.random.PRNGKey(2))
+    eden = rel(ME.ms_eden_dequant(ME.ms_eden(x, keys[0], keys[1]),
+                                  rotated=False))
+    return {
+        "bytes_per_element": {"bf16": 2.0,
+                              "nvfp4_cache": _KVQ_BYTES_PER_ELT},
+        "bytes_ratio": _KVQ_BYTES_PER_ELT / 2.0,
+        "cache_rounding_rel_mse": {"rtn_codec": round(rtn, 6),
+                                   "sr": round(sr, 6),
+                                   "ms_eden": round(eden, 6)},
+        "shipped_mode": "rtn_codec",
+        "block_shape": [n, 128],
+    }
+
+
 def _emit_bench_json(decode_paths, rows, smoke, observability=None,
-                     quant_health=None):
+                     quant_health=None, kv_quant=None):
     """BENCH_serve.json at the repo root: the serving bench trajectory
     artifact future PRs regress against."""
     payload = {
@@ -382,6 +443,8 @@ def _emit_bench_json(decode_paths, rows, smoke, observability=None,
         payload["observability"] = observability
     if quant_health is not None:
         payload["quant_health"] = quant_health
+    if kv_quant is not None:
+        payload["kv_quant"] = kv_quant
     path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         os.pardir, "BENCH_serve.json")
     with open(os.path.normpath(path), "w") as f:
@@ -506,5 +569,6 @@ def run(quick: bool = True):
                      f"tok_s={po_tps:.1f} requests={n_req} "
                      f"slots=4 finished={st['finished']}"))
     _emit_bench_json(dp_detail, rows, smoke, observability=observability,
-                     quant_health=_quant_health(smoke))
+                     quant_health=_quant_health(smoke),
+                     kv_quant=_kv_quant_section(smoke))
     return rows

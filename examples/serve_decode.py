@@ -73,6 +73,12 @@ def main():
                     help="block-table flash-decode Pallas kernel "
                          "(default: on for TPU, off for CPU where it would "
                          "run interpreted; 'on' forces interpret mode)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="store the paged KV pool as packed NVFP4 "
+                         "(PackedKV: e2m1 codes + e4m3 group scales, "
+                         "0.28125x bf16 bytes; dequantized in-kernel or "
+                         "exactly on the gather path — see serve/README "
+                         "'Quantized KV cache')")
     ap.add_argument("--data-shards", type=int, default=1,
                     help="serve through the mesh-sharded engine: slots + "
                          "slot-affine KV pool over a (data=N, model=1) mesh "
@@ -131,6 +137,7 @@ def main():
     eng = ServeEngine(cfg, params, EngineConfig(
         n_slots=b, max_len=max_len, prefill_chunk=16,
         paged=not args.dense, prequant=not args.no_prequant,
+        kv_quant=args.kv_quant,
         scheme=args.scheme, spec_k=args.spec_k, draft_layers=draft_layers,
         paged_kernel=(None if args.paged_kernel is None
                       else args.paged_kernel == "on"), mesh=mesh, obs=obs))
@@ -145,6 +152,7 @@ def main():
     print(f"arch={cfg.name} scheme={args.scheme} engine "
           f"(paged={not args.dense}, prequant={not args.no_prequant}, "
           f"paged_kernel={eng.paged_kernel}"
+          + (", kv_quant=True" if args.kv_quant else "")
           + (f", data_shards={eng.data_shards}" if mesh is not None else "")
           + ")")
     print(f"prefill: {st['prefill_tokens']} tokens in {st['prefill_s']*1e3:.0f}ms")

@@ -97,10 +97,17 @@ def fp4_decode(code: jax.Array) -> jax.Array:
 
 
 def fp4_sr(x: jax.Array, key: jax.Array) -> jax.Array:
-    """Stochastic rounding onto the E2M1 grid (unbiased for |x| <= 6).
+    """Stochastic rounding onto the E2M1 grid.
 
-    P(round up) = (x - lo) / (hi - lo). Values beyond the grid edge clip
-    (callers choose scales so this does not occur, preserving unbiasedness).
+    P(round up) = (x - lo) / (hi - lo). UNBIASED ONLY FOR |x| <= 6: beyond
+    the grid edge the value saturates deterministically to +-6, which is a
+    (silent) bias. That saturation is deliberate — matching hardware
+    converts — so the unbiasedness contract is the CALLER's to uphold via
+    the scale chain: `s = fp8_rtn(absmax_g / (FP4_MAX * FP8_RTN_MARGIN))`
+    bounds every normalized magnitude by exactly 6 (the 16/17 margin
+    absorbs the worst-case e4m3 round-down), so no in-contract caller ever
+    lands in the saturating branch. `fp4_overflow_fraction` is the debug
+    probe for that invariant (tests/test_quant.py pins the boundary).
     """
     xf = x.astype(jnp.float32)
     mag = jnp.clip(jnp.abs(xf), 0.0, FP4_MAX)
@@ -115,6 +122,17 @@ def fp4_sr(x: jax.Array, key: jax.Array) -> jax.Array:
     u = jax.random.uniform(key, shape=xf.shape, dtype=jnp.float32)
     q = jnp.where(u < p_up, hi, lo)
     return jnp.sign(xf) * q
+
+
+def fp4_overflow_fraction(x: jax.Array) -> jax.Array:
+    """Fraction of elements whose magnitude exceeds the E2M1 grid edge.
+
+    Debug probe for the fp4_sr / fp4_rtn saturation contract: any caller
+    that normalizes with the 16/17-margin scale chain must see exactly 0.0
+    here. Nonzero means the silent-clip bias fp4_sr documents is active.
+    """
+    return jnp.mean((jnp.abs(x.astype(jnp.float32)) > FP4_MAX)
+                    .astype(jnp.float32))
 
 
 # --------------------------------------------------------------------------
@@ -211,3 +229,64 @@ def unpack_fp4(packed: jax.Array) -> jax.Array:
     hi = (packed >> 4) & 0xF
     out = jnp.stack([lo, hi], axis=-1)
     return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+# --------------------------------------------------------------------------
+# NVFP4 cache codec — the storage format of the quantized paged KV pool
+# (serve/kv_pool.py `quantized=True`).
+#
+# Per-token, per-16-group along the LAST (feature) axis, deterministic RTN,
+# unit per-tensor scale. Determinism matters twice over: a token's packed
+# image is a pure function of its bf16 value, so (a) prefix-cache re-runs
+# produce byte-identical blocks (hot == cold), and (b) tokens can be
+# quantized independently at scatter time — no cross-token state, no
+# "retire the block first" staging.
+#
+# Storage is uint8 twice: e2m1 codes packed two per byte (d/2 bytes) and
+# e4m3 scales as RAW BITS (d/16 bytes), so a cached feature dim d costs
+# d/2 + d/16 = 0.5625 d bytes vs 2 d for bf16 — a 0.28125x ratio.
+#
+# Dequant is EXACT in bf16: an e2m1 magnitude (<= 2 significand bits) times
+# an e4m3 scale (<= 4) has <= 6 significand bits and magnitude <= 2688,
+# both within bf16 — so a bf16 gather-path dequant and an f32 in-kernel
+# dequant see bit-identical operands (tests/test_kv_quant.py pins this).
+# --------------------------------------------------------------------------
+
+def nvfp4_cache_encode(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Quantize cache values to NVFP4 packed bytes (deterministic RTN).
+
+    Groups of 16 along the last axis (which must divide by GROUP and be
+    even). Returns `(codes, scale_bits)`: uint8 packed e2m1 pairs of shape
+    (..., d/2) and uint8 e4m3 scale bits of shape (..., d/16). The 16/17
+    scale margin guarantees normalized magnitudes never exceed 6, so
+    `fp4_rtn` never saturates on this path (`fp4_overflow_fraction == 0`).
+    """
+    xf = x.astype(jnp.float32)
+    g = xf.reshape(*xf.shape[:-1], -1, GROUP)
+    gmax = jnp.max(jnp.abs(g), axis=-1)
+    scale = fp8_rtn(gmax / (FP4_MAX * FP8_RTN_MARGIN))
+    q = fp4_rtn(g / jnp.where(scale > 0, scale, 1.0)[..., None])
+    codes = fp4_code(q).reshape(xf.shape)
+    return pack_fp4(codes), _fp8_bits(scale.astype(jnp.float8_e4m3fn))
+
+
+def nvfp4_cache_decode(codes: jax.Array, scale_bits: jax.Array,
+                       dtype=jnp.bfloat16) -> jax.Array:
+    """Inverse of nvfp4_cache_encode (exact in bf16 and wider)."""
+    vals = fp4_decode(unpack_fp4(codes))
+    scales = _bits_fp8(scale_bits).astype(jnp.float32)
+    return (vals * jnp.repeat(scales, GROUP, axis=-1)).astype(dtype)
+
+
+def nvfp4_cache_overflow(x: jax.Array) -> jax.Array:
+    """Debug-mode overflow detector for the cache-quantization path.
+
+    Replays the encode scale chain and reports the fraction of normalized
+    magnitudes beyond the E2M1 edge — the quantity the 16/17 margin pins
+    to zero. Wired behind `KVPool(debug=True)`; never on the hot path.
+    """
+    xf = x.astype(jnp.float32)
+    g = xf.reshape(*xf.shape[:-1], -1, GROUP)
+    gmax = jnp.max(jnp.abs(g), axis=-1)
+    scale = fp8_rtn(gmax / (FP4_MAX * FP8_RTN_MARGIN))
+    return fp4_overflow_fraction(g / jnp.where(scale > 0, scale, 1.0)[..., None])

@@ -22,7 +22,8 @@ from repro.kernels.nvfp4_quant import nvfp4_fos_quant
 
 __all__ = ["nvfp4_fos_quant", "ms_eden_requant", "fp4_matmul",
            "quartet2_backward_gemm", "paged_attention",
-           "paged_mla_attention"]
+           "paged_mla_attention", "paged_attention_q",
+           "paged_mla_attention_q"]
 
 
 def _resolve_interpret(interpret: bool | None) -> bool:
@@ -68,6 +69,41 @@ def paged_mla_attention(q_abs, q_rope, cc_pool, kc_pool, table, pos, *,
     return PA.paged_mla_call(q_abs, q_rope, cc_pool, kc_pool, table,
                              jnp.asarray(pos, jnp.int32), scale=scale,
                              interpret=_resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention_q(q, k_codes, k_scales, v_codes, v_scales, table, pos, *,
+                      window: int | None = None,
+                      interpret: bool | None = None):
+    """Flash-decode GQA attention off the NVFP4-QUANTIZED paged pool.
+
+    Packed-operand twin of `paged_attention`: K/V arrive as the quantized
+    pool's raw leaves — e2m1 code pairs (P, BS, KV, hd/2) uint8 + e4m3
+    scale bits (P, BS, KV, hd/16) uint8 per operand (the fields of
+    serve.kv_pool.PackedKV, passed unbundled so this layer never imports
+    serve) — and dequantize block-wise in VMEM inside the online-softmax
+    sweep. Equivalent to `paged_attention` over the dequantized pools;
+    the dequant is exact in f32/bf16, so parity with the gather-then-
+    decode reference is the same contract as the bf16 kernel's.
+    """
+    out = PA.paged_gqa_q_call(q, k_codes, k_scales, v_codes, v_scales, table,
+                              jnp.asarray(pos, jnp.int32), window=window,
+                              interpret=_resolve_interpret(interpret))
+    return out.astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("qk_dim", "interpret"))
+def paged_mla_attention_q(q_abs, q_rope, cc_codes, cc_scales, kc_codes,
+                          kc_scales, table, pos, *, qk_dim: int,
+                          interpret: bool | None = None):
+    """Absorbed-form MLA flash-decode over NVFP4-QUANTIZED latent pools
+    (packed-operand twin of `paged_mla_attention`; operands are the
+    unbundled PackedKV leaves of the cc / kc pools)."""
+    scale = float(np.float32(1.0) / np.sqrt(np.float32(qk_dim)))
+    return PA.paged_mla_q_call(q_abs, q_rope, cc_codes, cc_scales, kc_codes,
+                               kc_scales, table,
+                               jnp.asarray(pos, jnp.int32), scale=scale,
+                               interpret=_resolve_interpret(interpret))
 
 
 def quartet2_backward_gemm(a, b, rht_key, sr_key_a, sr_key_b, *,

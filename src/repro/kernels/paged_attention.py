@@ -39,6 +39,15 @@ chunks; query s of row b sits at absolute position pos[b] + s. Outputs are
 fp32; callers cast. Fully-masked rows (inactive slots: all-sentinel table)
 produce exact zeros (l == 0 guard), mirroring the reference path's
 gathered-zeros result.
+
+Each variant also has a `_q` twin consuming the NVFP4-quantized pool
+(`serve.kv_pool.PackedKV`): the packed-operand BlockSpecs DMA uint8 e2m1
+code pairs (d/2 bytes) plus uint8 e4m3 scale bits (d/16 bytes) per block —
+0.28125x the bf16 HBM bytes — and `_dequant_tile` decodes them block-wise
+in VMEM (arithmetic e2m1/e4m3 decode, no gathers) before the SAME online
+softmax sweep. Dequant is exact in f32, so `_q` kernel outputs match the
+gather-then-decode reference bit-for-bit at the operand level; the shared
+sweep keeps the flash numerics identical across storage modes.
 """
 
 from __future__ import annotations
@@ -51,7 +60,49 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import formats as F
+
 NEG_INF = -1e30  # matches models.attention.NEG_INF
+
+
+def _decode_e2m1(codes):
+    """E2M1 decode without a gather: value = sign * m0 * 2^e with the 3-bit
+    magnitude split as (e2, m1); subnormal pair {0, 0.5} special-cased
+    (same arithmetic as kernels/fp4_matmul.py)."""
+    c = codes.astype(jnp.int32)
+    sign = jnp.where((c >> 3) & 1, -1.0, 1.0)
+    e = (c >> 1) & 0x3
+    m = c & 0x1
+    mag = jnp.where(e == 0, 0.5 * m,
+                    (1.0 + 0.5 * m) * jnp.exp2((e - 1).astype(jnp.float32)))
+    return sign * mag
+
+
+def _decode_e4m3_bits(bits):
+    """E4M3 (float8_e4m3fn) decode from raw uint8 bits, arithmetically:
+    (1 + m/8) * 2^(e-7) for normals, m/8 * 2^-6 subnormals. Cache scales
+    are absmax-derived (non-negative, <= 448), so the sign bit is 0 and
+    the NaN encoding (e=15, m=7) is unreachable — no bitcast needed in
+    the kernel body."""
+    b = bits.astype(jnp.int32)
+    e = (b >> 3) & 0xF
+    m = (b & 0x7).astype(jnp.float32)
+    return jnp.where(e == 0, m * (0.125 * 2.0 ** -6),
+                     (1.0 + m * 0.125)
+                     * jnp.exp2((e - 7).astype(jnp.float32)))
+
+
+def _dequant_tile(codes_ref, scales_ref):
+    """Dequantize one packed pool block in VMEM: (1, BS, ..., d/2) uint8
+    code pairs + (1, BS, ..., d/16) e4m3 scale bits -> (BS, ..., d) f32.
+    Exact: every e2m1 x e4m3 product is f32 (and bf16) representable, so
+    this sees bit-identical operands to the gather-path bf16 dequant."""
+    packed = codes_ref[0]
+    lo = (packed & 0xF).astype(jnp.uint8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.uint8)
+    codes = jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+    scales = _decode_e4m3_bits(scales_ref[0])
+    return _decode_e2m1(codes) * jnp.repeat(scales, F.GROUP, axis=-1)
 
 
 def _positions(p0, sq: int, bs: int, j):
@@ -77,13 +128,16 @@ def _online_update(s, ok, m_ref, l_ref, acc_ref, vals):
     m_ref[...] = m_new
 
 
-def _gqa_kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                m_ref, l_ref, acc_ref, *, bs: int, sentinel: int,
-                window: int | None, sqrt_hd: float):
+def _gqa_sweep(table_ref, pos_ref, q_ref, o_ref, m_ref, l_ref, acc_ref,
+               load_kv, *, kv: int, vd: int, bs: int, sentinel: int,
+               window: int | None, sqrt_hd: float):
+    """Shared GQA flash sweep; `load_kv()` yields the cell's f32 (BS, KV,
+    hd) / (BS, KV, vd) operands — a bf16 cast for the reference pool, a
+    VMEM dequant for the packed one — so both storage modes run literally
+    the same softmax/value arithmetic."""
     b, j = pl.program_id(0), pl.program_id(1)
-    sq, h = q_ref.shape[1], q_ref.shape[2]
-    kv, hd = k_ref.shape[2], k_ref.shape[3]
-    rep, vd = h // kv, v_ref.shape[3]
+    sq, h, hd = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
+    rep = h // kv
 
     @pl.when(j == 0)
     def _init():
@@ -103,8 +157,7 @@ def _gqa_kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
     @pl.when(live)
     def _block():
         q = q_ref[0].astype(jnp.float32)    # (Sq, H, hd)
-        k = k_ref[0].astype(jnp.float32)    # (BS, KV, hd)
-        v = v_ref[0].astype(jnp.float32)    # (BS, KV, vd)
+        k, v = load_kv()                    # (BS, KV, hd), (BS, KV, vd) f32
         # grouped scores: (KV, Sq*rep, hd) x (KV, hd, BS) -> (KV, Sq*rep, BS)
         qg = q.reshape(sq, kv, rep, hd).transpose(1, 0, 2, 3)
         qg = qg.reshape(kv, sq * rep, hd)
@@ -133,9 +186,33 @@ def _gqa_kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = o.transpose(1, 0, 2, 3).reshape(sq, h, vd)
 
 
-def _mla_kernel(table_ref, pos_ref, qa_ref, qr_ref, cc_ref, kc_ref, o_ref,
+def _gqa_kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
                 m_ref, l_ref, acc_ref, *, bs: int, sentinel: int,
-                scale: float):
+                window: int | None, sqrt_hd: float):
+    _gqa_sweep(table_ref, pos_ref, q_ref, o_ref, m_ref, l_ref, acc_ref,
+               lambda: (k_ref[0].astype(jnp.float32),
+                        v_ref[0].astype(jnp.float32)),
+               kv=k_ref.shape[2], vd=v_ref.shape[3], bs=bs,
+               sentinel=sentinel, window=window, sqrt_hd=sqrt_hd)
+
+
+def _gqa_q_kernel(table_ref, pos_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *, bs: int, sentinel: int,
+                  window: int | None, sqrt_hd: float):
+    """Packed-operand twin: K/V arrive as e2m1 code pairs + e4m3 scale bits
+    and dequantize in VMEM only for live cells."""
+    _gqa_sweep(table_ref, pos_ref, q_ref, o_ref, m_ref, l_ref, acc_ref,
+               lambda: (_dequant_tile(kc_ref, ks_ref),
+                        _dequant_tile(vc_ref, vs_ref)),
+               kv=kc_ref.shape[2], vd=vc_ref.shape[3] * 2, bs=bs,
+               sentinel=sentinel, window=window, sqrt_hd=sqrt_hd)
+
+
+def _mla_sweep(table_ref, pos_ref, qa_ref, qr_ref, o_ref,
+               m_ref, l_ref, acc_ref, load_cc_kc, *, bs: int, sentinel: int,
+               scale: float):
+    """Shared MLA flash sweep; `load_cc_kc()` yields the cell's f32
+    (BS, lora) / (BS, rope) latent operands (bf16 cast or VMEM dequant)."""
     b, j = pl.program_id(0), pl.program_id(1)
     sq, h, lora = qa_ref.shape[1], qa_ref.shape[2], qa_ref.shape[3]
 
@@ -152,8 +229,7 @@ def _mla_kernel(table_ref, pos_ref, qa_ref, qr_ref, cc_ref, kc_ref, o_ref,
     def _block():
         qa = qa_ref[0].astype(jnp.float32).reshape(sq * h, lora)
         qr = qr_ref[0].astype(jnp.float32).reshape(sq * h, -1)
-        cc = cc_ref[0].astype(jnp.float32)  # (BS, lora)
-        kc = kc_ref[0].astype(jnp.float32)  # (BS, rope)
+        cc, kc = load_cc_kc()               # (BS, lora), (BS, rope) f32
         s = (jnp.dot(qa, cc.T, preferred_element_type=jnp.float32)
              + jnp.dot(qr, kc.T, preferred_element_type=jnp.float32)) * scale
         s = s.reshape(sq, h, bs)
@@ -170,6 +246,27 @@ def _mla_kernel(table_ref, pos_ref, qa_ref, qr_ref, cc_ref, kc_ref, o_ref,
     @pl.when(j == pl.num_programs(1) - 1)
     def _final():
         o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+
+
+def _mla_kernel(table_ref, pos_ref, qa_ref, qr_ref, cc_ref, kc_ref, o_ref,
+                m_ref, l_ref, acc_ref, *, bs: int, sentinel: int,
+                scale: float):
+    _mla_sweep(table_ref, pos_ref, qa_ref, qr_ref, o_ref,
+               m_ref, l_ref, acc_ref,
+               lambda: (cc_ref[0].astype(jnp.float32),
+                        kc_ref[0].astype(jnp.float32)),
+               bs=bs, sentinel=sentinel, scale=scale)
+
+
+def _mla_q_kernel(table_ref, pos_ref, qa_ref, qr_ref, ccc_ref, ccs_ref,
+                  kcc_ref, kcs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bs: int, sentinel: int, scale: float):
+    """Packed-operand twin: both latent pools arrive as NVFP4 bytes."""
+    _mla_sweep(table_ref, pos_ref, qa_ref, qr_ref, o_ref,
+               m_ref, l_ref, acc_ref,
+               lambda: (_dequant_tile(ccc_ref, ccs_ref),
+                        _dequant_tile(kcc_ref, kcs_ref)),
+               bs=bs, sentinel=sentinel, scale=scale)
 
 
 def _table_spec_index(sentinel):
@@ -216,6 +313,44 @@ def paged_gqa_call(q, k_pool, v_pool, table, pos, *, window: int | None,
     )(table, pos, q, k_pool, v_pool)
 
 
+def paged_gqa_q_call(q, k_codes, k_scales, v_codes, v_scales, table, pos, *,
+                     window: int | None, interpret: bool):
+    """GQA flash-decode over the NVFP4-packed pool: same grid, same index
+    maps, but each pool operand is a (codes, scale-bits) uint8 pair whose
+    BlockSpecs move 0.28125x the bf16 bytes per cell."""
+    b, sq, h, hd = q.shape
+    n_blocks, bs, kv = k_codes.shape[0], k_codes.shape[1], k_codes.shape[2]
+    vd = v_codes.shape[3] * 2
+    maxb = table.shape[1]
+    rep = h // kv
+    sqrt_hd = float(np.sqrt(np.float32(hd)))  # matches decode_sdpa's divisor
+    idx = _table_spec_index(n_blocks)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, maxb),
+        in_specs=[
+            pl.BlockSpec((1, sq, h, hd), lambda i, j, t, p: (i, 0, 0, 0)),
+            pl.BlockSpec((1, bs, kv, hd // 2), idx),
+            pl.BlockSpec((1, bs, kv, hd // F.GROUP), idx),
+            pl.BlockSpec((1, bs, kv, vd // 2), idx),
+            pl.BlockSpec((1, bs, kv, vd // F.GROUP), idx),
+        ],
+        out_specs=pl.BlockSpec((1, sq, h, vd), lambda i, j, t, p: (i, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kv, sq, rep), jnp.float32),
+            pltpu.VMEM((kv, sq, rep), jnp.float32),
+            pltpu.VMEM((kv, sq, rep, vd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_gqa_q_kernel, bs=bs, sentinel=n_blocks,
+                          window=window, sqrt_hd=sqrt_hd),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, vd), jnp.float32),
+        interpret=interpret,
+    )(table, pos, q, k_codes, k_scales, v_codes, v_scales)
+
+
 def paged_mla_call(q_abs, q_rope, cc_pool, kc_pool, table, pos, *,
                    scale: float, interpret: bool):
     b, sq, h, lora = q_abs.shape
@@ -250,3 +385,43 @@ def paged_mla_call(q_abs, q_rope, cc_pool, kc_pool, table, pos, *,
         out_shape=jax.ShapeDtypeStruct((b, sq, h, lora), jnp.float32),
         interpret=interpret,
     )(table, pos, q_abs, q_rope, cc_pool, kc_pool)
+
+
+def paged_mla_q_call(q_abs, q_rope, cc_codes, cc_scales, kc_codes, kc_scales,
+                     table, pos, *, scale: float, interpret: bool):
+    """Absorbed-form MLA flash-decode over NVFP4-packed latent pools."""
+    b, sq, h, lora = q_abs.shape
+    rope = q_rope.shape[3]
+    n_blocks, bs = cc_codes.shape[0], cc_codes.shape[1]
+    maxb = table.shape[1]
+    idx = _table_spec_index(n_blocks)
+
+    def pool_idx3(i, j, t, p):
+        return idx(i, j, t, p)[:3]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, maxb),
+        in_specs=[
+            pl.BlockSpec((1, sq, h, lora), lambda i, j, t, p: (i, 0, 0, 0)),
+            pl.BlockSpec((1, sq, h, rope), lambda i, j, t, p: (i, 0, 0, 0)),
+            pl.BlockSpec((1, bs, lora // 2), pool_idx3),
+            pl.BlockSpec((1, bs, lora // F.GROUP), pool_idx3),
+            pl.BlockSpec((1, bs, rope // 2), pool_idx3),
+            pl.BlockSpec((1, bs, rope // F.GROUP), pool_idx3),
+        ],
+        out_specs=pl.BlockSpec((1, sq, h, lora),
+                               lambda i, j, t, p: (i, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((sq, h), jnp.float32),
+            pltpu.VMEM((sq, h), jnp.float32),
+            pltpu.VMEM((sq, h, lora), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_mla_q_kernel, bs=bs, sentinel=n_blocks,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, lora), jnp.float32),
+        interpret=interpret,
+    )(table, pos, q_abs, q_rope, cc_codes, cc_scales, kc_codes, kc_scales)

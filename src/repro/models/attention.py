@@ -274,9 +274,18 @@ def gqa_decode(p, x, cfg, scheme, seed, layer, cache_kv, pos, *, window=None,
         vc = KV.scatter_tokens(vc, wt, positions, v, valid)
         if paged_kernel:
             from repro.kernels import ops as KOPS
-            o = KOPS.paged_attention(q, kc, vc, rt, posb,
-                                     window=window)
+            if isinstance(kc, KV.PackedKV):
+                # NVFP4 pool: hand the kernel the raw packed leaves; it
+                # dequantizes block-wise in VMEM (kernels/paged_attention.py)
+                o = KOPS.paged_attention_q(q, kc.codes, kc.scales,
+                                           vc.codes, vc.scales, rt, posb,
+                                           window=window)
+            else:
+                o = KOPS.paged_attention(q, kc, vc, rt, posb,
+                                         window=window)
         else:
+            # gather_view dequantizes PackedKV pools to bf16 (exactly), so
+            # the reference path is storage-mode agnostic
             o = decode_sdpa(q, KV.gather_view(kc, rt),
                             KV.gather_view(vc, rt), posb,
                             window=window)

@@ -123,8 +123,14 @@ def mla_decode(p, x, cfg, scheme, seed, layer, cache, pos, *, active=None,
         kc = KV.scatter_tokens(kc, wt, positions, kr2, valid)
         if paged_kernel:
             from repro.kernels import ops as KOPS
-            o_lat = KOPS.paged_mla_attention(q_abs, q_rope, cc, kc,
-                                             rt, posb, qk_dim=qk_dim)
+            if isinstance(cc, KV.PackedKV):
+                # NVFP4 latent pools: kernel dequantizes in VMEM
+                o_lat = KOPS.paged_mla_attention_q(
+                    q_abs, q_rope, cc.codes, cc.scales, kc.codes, kc.scales,
+                    rt, posb, qk_dim=qk_dim)
+            else:
+                o_lat = KOPS.paged_mla_attention(q_abs, q_rope, cc, kc,
+                                                 rt, posb, qk_dim=qk_dim)
             cv = None
         else:
             cv = KV.gather_view(cc, rt)

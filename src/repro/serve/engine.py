@@ -122,6 +122,15 @@ class EngineConfig:
     # forces the kernel (interpret mode off-TPU — how the parity tests
     # drive it); requires paged=True.
     paged_kernel: bool | None = None
+    # NVFP4-quantized KV cache (serve/kv_pool.py PackedKV): token-kind pool
+    # leaves stored as packed e2m1 codes + e4m3 group scales (0.28125x the
+    # bf16 HBM bytes), quantized per token at scatter time with
+    # deterministic RTN and dequantized in-kernel (paged_kernel) or exactly
+    # on the gather path. Requires paged=True; the bf16 pool stays the
+    # bitwise reference mode. Incompatible with spec_k > 0: exact
+    # speculative verification is specified against the bf16 cache image,
+    # and a quantized target cache would silently change acceptance.
+    kv_quant: bool = False
     # mesh-sharded serving (launch.mesh.make_serve_mesh): decode slots + the
     # slot-affine KV pool shard over the mesh's "data" axis (manual
     # shard_map — no pool collectives), packed weights + LM head over
@@ -195,9 +204,17 @@ class ServeEngine:
                     f"n_slots={e.n_slots} must divide over the mesh 'data' "
                     f"axis ({self.data_shards}): shard_map splits the slot "
                     "batch evenly")
+        if e.kv_quant and not e.paged:
+            raise ValueError("kv_quant=True requires paged=True: the NVFP4 "
+                             "cache format is a property of pool blocks "
+                             "(the dense cache is the bitwise reference)")
+        if e.kv_quant and e.spec_k > 0:
+            raise ValueError("kv_quant=True is incompatible with spec_k > 0: "
+                             "exact speculative verification is defined "
+                             "against the bf16 cache image")
         self.pool = KVPool(cfg, e.n_slots, e.max_len, paged=e.paged,
                            block_size=e.block_size, n_blocks=e.n_blocks,
-                           n_shards=self.data_shards)
+                           n_shards=self.data_shards, quantized=e.kv_quant)
         if self.mesh is not None:
             # commit the hot state to its serving layout up front: packed
             # weights + head over "model", cache block/slot homes over

@@ -50,24 +50,58 @@ from the mixer decode paths (models/attention.py, models/mla.py); the
 With `paged=False` the pool builds dense per-slot caches (n_slots, max_len,
 ...) instead — same masking conventions, bit-identical attention arithmetic —
 used as the reference layout in tests and by the legacy greedy loop.
+
+With `quantized=True` (paged only) every token-kind leaf is stored as NVFP4
+`PackedKV` bytes instead of bf16 — packed e2m1 codes + e4m3 group scales,
+0.28125x the HBM bytes — quantized per token at scatter time with
+deterministic RTN and dequantized either in the Pallas flash-decode kernel
+(kernels/paged_attention.py `*_q` entry points) or exactly in bf16 on the
+gather path. The bf16 pool remains the bitwise reference mode; quantized
+pools trade bit-exactness for bandwidth under an MSE-tested rounding scheme
+(docs/CONVENTIONS.md §7, serve/README.md "Quantized KV cache").
 """
 
 from __future__ import annotations
 
 import math
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import formats as F
 from repro.models import griffin as G
 from repro.models import lm
 
 TOKEN_KINDS = ("kv", "mla")
 STATE_KINDS = ("wkv", "tm_prev", "cm_prev", "lru")
 _TOKEN_MIXERS = ("gqa", "lattn", "mla")
+
+
+class PackedKV(NamedTuple):
+    """One NVFP4-quantized token-kind pool leaf (`KVPool(quantized=True)`).
+
+    Two uint8 arrays sharing the leading (pool block, block offset) axes of
+    the bf16 leaf they replace: e2m1 codes packed two per byte over the
+    LAST feature axis (`..., d/2`) and e4m3 group scales stored as raw bits
+    (`..., d/16`) — 0.5625 bytes per cached element vs 2 for bf16.
+
+    A NamedTuple, hence a pytree: `jax.tree.map` descends into both leaves,
+    so the jitted block copy (`KVPool._copy_block_device`), the shard_map
+    in_specs of serve/decode.py, and `init_cache`'s stage broadcast all
+    handle codes and scales together with no special casing — a COW copy
+    moves a packed block atomically because both leaves sit in one jitted
+    `jax.tree.map`. Quantization is per-token deterministic RTN
+    (`core/formats.py:nvfp4_cache_encode`): a token's packed bytes are a
+    pure function of its bf16 value, so a block is immutable packed bytes
+    once its positions are written, and prefix-cache aliasing / COW reuse
+    packed bytes bit-for-bit (hot == cold, docs/CONVENTIONS.md §7).
+    """
+
+    codes: jax.Array   # uint8, (..., d // 2): packed e2m1 pairs
+    scales: jax.Array  # uint8, (..., d // GROUP): e4m3 scale bits
 
 
 def reclaim_window(cfg: ArchConfig, specs=None) -> int | None:
@@ -91,14 +125,23 @@ def reclaim_window(cfg: ArchConfig, specs=None) -> int | None:
 # device-side primitives (used inside the jitted decode step)
 # --------------------------------------------------------------------------
 
-def gather_view(pool: jax.Array, table: jax.Array) -> jax.Array:
+def gather_view(pool, table: jax.Array) -> jax.Array:
     """Materialize per-sequence logical views from the pool.
 
     pool: (P, BS, ...); table: (B, MAXB) with OOB sentinel for unallocated.
     Returns (B, MAXB*BS, ...): each row's blocks in logical order, zeros for
     unallocated blocks (always masked downstream — attention only admits
     key positions <= the row's current position).
+
+    A `PackedKV` pool gathers both packed leaves and DEQUANTIZES to bf16
+    (exact: e2m1 x e4m3 products fit bf16), so the dense/gather attention
+    path consumes quantized pools with no mixer changes; unallocated blocks
+    decode to exactly 0.0 (zero code x zero scale), preserving the fill
+    convention.
     """
+    if isinstance(pool, PackedKV):
+        return F.nvfp4_cache_decode(gather_view(pool.codes, table),
+                                    gather_view(pool.scales, table))
     v = pool.at[table].get(mode="fill", fill_value=0)
     b, mb = table.shape
     return v.reshape(b, mb * pool.shape[1], *pool.shape[2:])
@@ -118,16 +161,33 @@ def split_tables(block_table: jax.Array) -> tuple[jax.Array, jax.Array]:
     return block_table, block_table
 
 
-def scatter_tokens(pool: jax.Array, table: jax.Array, positions: jax.Array,
-                   vals: jax.Array, valid: jax.Array) -> jax.Array:
+def scatter_tokens(pool, table: jax.Array, positions: jax.Array,
+                   vals: jax.Array, valid: jax.Array):
     """Write per-token values through the block table.
 
     positions: (B, S) absolute token positions; vals: (B, S, ...);
     valid: (B, S) bool — rows/positions with valid=False (inactive slots,
     out-of-range positions) are routed to the OOB sentinel and dropped.
+    NEGATIVE positions are folded into `valid` here: the block lookup
+    clips them to 0, so a caller passing valid=True for a not-yet-started
+    row (position -1) would otherwise silently corrupt block 0 / offset 0
+    — bad positions must route to the sentinel like every other invalid
+    write, whatever the caller's mask says.
+
+    A `PackedKV` pool quantizes per token (NVFP4 deterministic RTN over the
+    last feature axis) and scatters codes and scale bits through the same
+    block/offset indices — per-token groups make each position's packed
+    bytes independent, so no block-level staging is needed and a block is
+    immutable packed bytes as soon as its positions are written.
     """
+    if isinstance(pool, PackedKV):
+        codes, scales = F.nvfp4_cache_encode(vals)
+        return PackedKV(
+            scatter_tokens(pool.codes, table, positions, codes, valid),
+            scatter_tokens(pool.scales, table, positions, scales, valid))
     n_blocks, bs = pool.shape[0], pool.shape[1]
     b = table.shape[0]
+    valid = valid & (positions >= 0)
     logical = jnp.clip(positions, 0) // bs
     blk = table.at[jnp.arange(b)[:, None], logical].get(
         mode="fill", fill_value=n_blocks)
@@ -141,12 +201,27 @@ def scatter_tokens(pool: jax.Array, table: jax.Array, positions: jax.Array,
 # --------------------------------------------------------------------------
 
 def _layer_cache(spec, cfg: ArchConfig, n_slots: int, max_len: int, *,
-                 paged: bool, n_blocks: int, block_size: int):
+                 paged: bool, n_blocks: int, block_size: int,
+                 quantized: bool = False):
     mixer, ff = spec
     hd = cfg.hd
     c: dict[str, Any] = {}
 
     def tok(*feat):
+        if paged and quantized:
+            d = feat[-1]
+            if d % F.GROUP:
+                raise ValueError(
+                    f"quantized KV pool needs feature dims divisible by "
+                    f"{F.GROUP} (got {d} for mixer '{mixer}'): NVFP4 groups "
+                    "lie along the last cache axis")
+            # zero codes x zero scale bits decode to exactly 0.0, matching
+            # the bf16 pool's zero init / gather-fill convention
+            return PackedKV(
+                jnp.zeros((n_blocks, block_size, *feat[:-1], d // 2),
+                          jnp.uint8),
+                jnp.zeros((n_blocks, block_size, *feat[:-1], d // F.GROUP),
+                          jnp.uint8))
         if paged:
             return jnp.zeros((n_blocks, block_size, *feat), jnp.bfloat16)
         # dense serving cache: full max_len capacity for every kind — the
@@ -172,16 +247,19 @@ def _layer_cache(spec, cfg: ArchConfig, n_slots: int, max_len: int, *,
 
 
 def init_cache(cfg: ArchConfig, n_slots: int, max_len: int, *, paged: bool,
-               n_blocks: int, block_size: int, specs=None):
+               n_blocks: int, block_size: int, specs=None,
+               quantized: bool = False):
     """Stage-aligned serving cache pytree (pool layout when paged).
 
     `specs` overrides lm.layer_specs(cfg) — used by the speculative DRAFT
-    pool, whose cache covers only lm.prefix_specs(cfg, draft_layers)."""
+    pool, whose cache covers only lm.prefix_specs(cfg, draft_layers).
+    `quantized` stores token kinds as NVFP4 `PackedKV` leaves."""
     stages = []
     for pattern, count in (specs if specs is not None else lm.layer_specs(cfg)):
         one = {f"l{i}": _layer_cache(pattern[i], cfg, n_slots, max_len,
                                      paged=paged, n_blocks=n_blocks,
-                                     block_size=block_size)
+                                     block_size=block_size,
+                                     quantized=quantized)
                for i in range(len(pattern))}
         stages.append(jax.tree.map(
             lambda x: jnp.broadcast_to(x, (count, *x.shape)), one))
@@ -253,13 +331,20 @@ class KVPool:
 
     def __init__(self, cfg: ArchConfig, n_slots: int, max_len: int, *,
                  paged: bool = True, block_size: int = 16,
-                 n_blocks: int | None = None, specs=None, n_shards: int = 1):
+                 n_blocks: int | None = None, specs=None, n_shards: int = 1,
+                 quantized: bool = False):
         assert max_len % block_size == 0, \
             f"max_len {max_len} must be a multiple of block_size {block_size}"
+        if quantized and not paged:
+            raise ValueError(
+                "quantized=True requires paged=True: the NVFP4 cache format "
+                "is a property of pool blocks (dense mode is the bitwise "
+                "reference layout and stays bf16)")
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
         self.paged = paged
+        self.quantized = quantized
         self.block_size = block_size
         self.max_blocks = max_len // block_size
         if n_blocks is None:
@@ -277,7 +362,7 @@ class KVPool:
         self.specs = specs if specs is not None else lm.layer_specs(cfg)
         self.caches = init_cache(cfg, n_slots, max_len, paged=paged,
                                  n_blocks=n_blocks, block_size=block_size,
-                                 specs=self.specs)
+                                 specs=self.specs, quantized=quantized)
         self.has_state_kinds = any(
             mixer in ("rwkv_tm", "rec") or ff == "rwkv_cm"
             for pattern, _ in self.specs for mixer, ff in pattern)
@@ -311,6 +396,7 @@ class KVPool:
         self._table_dev = None
         self._tables_dev = None
         self._copy_fn = None
+        self._overflow_fn = None
         # sliding-window reclamation (pure-lattn stacks, paged mode only):
         # blocks whose newest key predates every future query's window go
         # back to the free list mid-sequence, so live blocks per slot stay
@@ -766,7 +852,13 @@ class KVPool:
     def _copy_block_device(self, src: int, dst: int) -> None:
         """Device copy of every token-kind leaf's block `src` -> `dst`
         (GLOBAL ids — the cache pytree lives in its committed global
-        layout; the per-step shard split happens inside the jitted step)."""
+        layout; the per-step shard split happens inside the jitted step).
+
+        Multi-leaf token kinds copy ATOMICALLY: `_map_token_kinds` applies
+        the copy via `jax.tree.map`, and a quantized pool's `PackedKV` is a
+        NamedTuple pytree, so its codes AND scale leaves move in the same
+        jitted call — a COW'd packed block can never pair fresh codes with
+        stale scales (tests/test_kv_quant.py pins the round trip)."""
         if self._copy_fn is None:
             def cp(caches, s, d):
                 return _map_token_kinds(
@@ -774,6 +866,24 @@ class KVPool:
             self._copy_fn = jax.jit(cp, donate_argnums=(0,))
         self.caches = self._copy_fn(self.caches, jnp.int32(src),
                                     jnp.int32(dst))
+
+    def check_quant_overflow(self, vals: jax.Array) -> float:
+        """Debug-mode overflow detector for the cache-quantization path.
+
+        Replays `nvfp4_cache_encode`'s scale chain on `vals` (anything a
+        mixer would scatter into this pool) and returns the fraction of
+        normalized magnitudes past the E2M1 edge — the 16/17 scale margin
+        pins it to exactly 0.0, and a nonzero value means the silent
+        saturation bias `core/formats.py:fp4_sr` documents is active.
+        Host-side and synchronous (one device_get), so it is a debug /
+        test / probe facility, NEVER called from the jitted step
+        (docs/CONVENTIONS.md §6 forbids callbacks in compiled code, which
+        is why this check cannot live inside `scatter_tokens` itself)."""
+        if not self.quantized:
+            return 0.0
+        if self._overflow_fn is None:
+            self._overflow_fn = jax.jit(F.nvfp4_cache_overflow)
+        return float(self._overflow_fn(vals))
 
     # ---- slot state ----
 

@@ -145,6 +145,12 @@ class PrefixCache:
 
     @staticmethod
     def supported(pool: KVPool) -> bool:
+        # Quantized (PackedKV) pools are supported with no special casing:
+        # sharing is by PHYSICAL BLOCK, and a shared quantized block is
+        # shared packed bytes — immutable once written (per-token
+        # deterministic RTN), so aliasing/COW semantics are unchanged and
+        # hot-vs-cold streams stay identical per storage mode
+        # (docs/CONVENTIONS.md §7).
         return pool.paged and pool.window is None and not pool.has_state_kinds
 
     def _tick(self) -> int:

@@ -48,6 +48,10 @@ _SCHED_SUITES = {"test_scheduler.py"}
 # quantization-health probe): `-m obs` selects it, wired by path.
 _OBS_SUITES = {"test_obs.py"}
 
+# Quantized-KV-cache suite (NVFP4 cache codec, PackedKV pools, packed-operand
+# decode kernels, kv_quant engine parity): `-m kvq` selects it, wired by path.
+_KVQ_SUITES = {"test_kv_quant.py"}
+
 
 def pytest_collection_modifyitems(config, items):
     for item in items:
@@ -59,6 +63,8 @@ def pytest_collection_modifyitems(config, items):
             item.add_marker(pytest.mark.scheduler)
         if item.fspath.basename in _OBS_SUITES:
             item.add_marker(pytest.mark.obs)
+        if item.fspath.basename in _KVQ_SUITES:
+            item.add_marker(pytest.mark.kvq)
 
 
 @pytest.fixture(scope="session")

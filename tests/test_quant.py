@@ -102,6 +102,40 @@ class TestQuantizerInvariants:
         ratio = jnp.abs(x) / jnp.where(denom == 0, 1.0, denom)
         assert float(ratio.max()) <= 6.0 + 1e-5
 
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.floats(2 ** -20, 2 ** 20))
+    def test_sr_scale_chain_boundary(self, seed, mag):
+        """The 16/17 margin at its EDGE: groups whose absmax sits exactly at
+        (and adversarially near) e4m3 binade boundaries, scaled across 40
+        orders of magnitude. The e4m3-rounded group scales must never push
+        a normalized value past the E2M1 grid edge — the boundary where the
+        silent saturation bias of `fp4_sr` (now documented in its contract)
+        would otherwise activate. Checked through the quant_sr chain AND
+        the `fp4_overflow_fraction` debug detector."""
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(key, (32, 64)) * mag
+        # plant worst-case group maxima: absmax exactly on / just above the
+        # value whose /(6*16/17) image lands mid-lattice in e4m3
+        edge = mag * jnp.float32(6.0 * F.FP8_RTN_MARGIN)
+        x = x.at[:, 0].set(edge * (1.0 + 2.0 ** -9))
+        x = x.at[:, F.GROUP].set(-edge)
+        qt = Q.quant_sr(x, jax.random.fold_in(key, 1))
+        denom = jnp.repeat(qt.scales, F.GROUP, -1) * qt.gscale
+        norm = x / jnp.where(denom == 0, 1.0, denom)
+        assert float(jnp.abs(norm).max()) <= 6.0 + 1e-5
+        assert float(F.fp4_overflow_fraction(norm)) == 0.0
+
+    def test_fp4_sr_saturates_beyond_grid(self):
+        """The documented out-of-contract behavior: |x| > 6 saturates
+        DETERMINISTICALLY (a bias — which is exactly why the scale chain
+        must prevent it, and why `fp4_overflow_fraction` exists to detect
+        any caller that fails to)."""
+        x = jnp.asarray([6.5, 100.0, -7.0, -1e6], jnp.float32)
+        q = F.fp4_sr(x, jax.random.PRNGKey(0))
+        assert np.array_equal(np.asarray(q), [6.0, 6.0, -6.0, -6.0])
+        assert float(F.fp4_overflow_fraction(x)) == 1.0
+        assert float(F.fp4_overflow_fraction(q)) == 0.0
+
     def test_square_block_scale_sharing(self, gauss):
         qt = Q.quant_square_block(gauss[:64, :64])
         s = np.asarray(qt.scales).reshape(4, 16, 4)
@@ -180,6 +214,33 @@ class TestMSEden:
         assert rel < 0.02, rel
         mse = float(jnp.mean((samples[0] - x) ** 2))
         assert mse < 2.2e-2  # same ballpark as direct path on N(0,1)
+
+    def test_posthoc_vs_direct_mse_parity(self):
+        """phase1+phase2 vs direct `ms_eden` head-to-head on the SAME keys:
+        the two paths are NOT bit-identical (the post-hoc path rounds
+        through e8m3 pseudo-scales before the phase-2 global alignment, a
+        different scale-rounding order), so parity is statistical — matched
+        mean MSE within 10% over many key draws, and both unbiased (the
+        unbiasedness halves are pinned by the two tests above)."""
+        x = jax.random.normal(jax.random.PRNGKey(11), (64, 256))
+
+        def direct_err(i):
+            k = jax.random.PRNGKey(i)
+            o = ME.ms_eden(x, jax.random.fold_in(k, 0),
+                           jax.random.fold_in(k, 1))
+            d = ME.ms_eden_dequant(o, rotated=False) - x
+            return jnp.mean(d * d)
+
+        def posthoc_err(i):
+            k = jax.random.PRNGKey(i)
+            p1 = ME.ms_eden_phase1(x, jax.random.fold_in(k, 0))
+            qt = ME.ms_eden_phase2(p1, jax.random.fold_in(k, 1))
+            d = R.rht_inv(Q.dequant(qt), jax.random.fold_in(k, 0)) - x
+            return jnp.mean(d * d)
+
+        de = float(jnp.mean(jax.vmap(direct_err)(jnp.arange(128))))
+        pe = float(jnp.mean(jax.vmap(posthoc_err)(jnp.arange(128))))
+        assert abs(pe - de) < 0.10 * de, (de, pe)
 
     def test_scales_within_fp8_after_correction(self):
         """FP8 cap 256 leaves room for the EDEN up-correction (Sec. 3.3)."""
