@@ -37,6 +37,12 @@ Rows (tok/s = generated tokens per wall-second of decode):
                              aliases the cached prompt blocks read-only and
                              skips that prefill (reports tokens skipped and
                              hit rate) — the prefix-sharing win
+  serve/frontend_stream    — the asyncio HTTP frontend end-to-end: SSE
+                             streaming clients over localhost with the
+                             engine on its bridge thread; one client is
+                             killed mid-stream to price the disconnect ->
+                             cancel -> reclaim path (streamed tok/s, TTFB,
+                             lifecycle accounting in BENCH_serve.json)
   serve/latency_deadline   — mixed-priority Poisson-less batch under
                              scheduler.LatencyPolicy with per-request
                              deadlines: reports p50/p99 request latency and
@@ -427,8 +433,105 @@ def _kv_quant_section(smoke):
     }
 
 
+def _frontend_section(cfg, params, scheme, smoke):
+    """serve/frontend_stream: the asyncio HTTP frontend end-to-end — real
+    sockets, SSE framing, the engine on its bridge thread. N concurrent
+    streaming clients, one killed mid-stream (disconnect -> cancel ->
+    reclaim). The row prices the full frontend stack in streamed tok/s;
+    the detail keeps the lifecycle accounting (cancelled, reclaimed
+    blocks, SSE events) BENCH_serve.json regresses across PRs."""
+    import asyncio
+    import json as _json
+
+    from repro.serve.frontend import CompletionFrontend, EngineBridge, \
+        FrontendConfig
+    n_clients = 3 if smoke else 4
+    prompt_len, max_new = (12, 6) if smoke else (16, 16)
+    prompts = _workload(cfg, n_clients, prompt_len=prompt_len, seed=17)
+    eng = ServeEngine(cfg, params, EngineConfig(
+        n_slots=n_clients, max_len=64, prefill_chunk=16, paged=True,
+        prequant=True, scheme=scheme, prefix_cache=True))
+    _warm_and_reset(eng, prompts[0][:8], 2)
+
+    async def client(port, prompt, kill_after=None):
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        body = _json.dumps({"prompt": prompt, "max_tokens": max_new,
+                            "stream": True}).encode()
+        writer.write((f"POST /v1/completions HTTP/1.1\r\nHost: b\r\n"
+                      f"Content-Length: {len(body)}\r\n\r\n").encode()
+                     + body)
+        await writer.drain()
+        await reader.readline()  # status
+        t0 = time.perf_counter()
+        toks, events, ttfb = [], 0, None
+        while True:
+            line = await reader.readline()
+            if not line:
+                break
+            if not line.startswith(b"data: "):
+                continue
+            if line[6:].strip() == b"[DONE]":
+                break
+            if ttfb is None:
+                ttfb = time.perf_counter() - t0
+            events += 1
+            toks.extend(_json.loads(line[6:])["choices"][0]["tokens"])
+            if kill_after is not None and len(toks) >= kill_after:
+                writer.transport.abort()
+                return toks, events, ttfb
+        writer.close()
+        return toks, events, ttfb
+
+    async def drive(port, bridge):
+        t0 = time.perf_counter()
+        res = await asyncio.gather(
+            *[client(port, p) for p in prompts[:-1]],
+            client(port, prompts[-1], kill_after=2))
+        wall = time.perf_counter() - t0
+        for _ in range(200):  # wait out the disconnect watcher's cancel
+            snap = await asyncio.wrap_future(bridge.snapshot())
+            if snap["stats"]["cancelled"] >= 1:
+                break
+            await asyncio.sleep(0.01)
+        return res, wall, snap
+
+    bridge = EngineBridge(eng)
+    fe = CompletionFrontend(bridge, FrontendConfig())
+
+    async def main():
+        await fe.start()
+        try:
+            return await drive(fe.port, bridge)
+        finally:
+            await fe.stop()
+
+    with bridge:
+        res, wall, snap = asyncio.run(main())
+    streamed = sum(len(t) for t, _, _ in res)
+    tps = streamed / max(wall, 1e-9)
+    ttfbs = sorted(t for _, _, t in res if t is not None)
+    detail = {
+        "clients": n_clients,
+        "streamed_tokens": streamed,
+        "sse_events": sum(e for _, e, _ in res),
+        "tok_s_streamed": round(tps, 2),
+        "ttfb_ms_p50": round(ttfbs[len(ttfbs) // 2] * 1e3, 2),
+        "disconnects": 1,
+        "cancelled": snap["stats"]["cancelled"],
+        "pool_free_blocks_after": snap["pool_free_blocks"],
+        "pool_total_blocks": snap["pool_total_blocks"],
+        "live_handles_after": snap["live_handles"],
+        "retry_after_s": snap["retry_after_s"],
+    }
+    row = ("serve/frontend_stream", 1e6 / max(tps, 1e-9),
+           f"tok_s={tps:.1f} clients={n_clients} "
+           f"cancelled={snap['stats']['cancelled']} "
+           f"ttfb_p50_ms={detail['ttfb_ms_p50']}")
+    return row, detail
+
+
 def _emit_bench_json(decode_paths, rows, smoke, observability=None,
-                     quant_health=None, kv_quant=None):
+                     quant_health=None, kv_quant=None, frontend=None):
     """BENCH_serve.json at the repo root: the serving bench trajectory
     artifact future PRs regress against."""
     payload = {
@@ -445,6 +548,8 @@ def _emit_bench_json(decode_paths, rows, smoke, observability=None,
         payload["quant_health"] = quant_health
     if kv_quant is not None:
         payload["kv_quant"] = kv_quant
+    if frontend is not None:
+        payload["frontend"] = frontend
     path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         os.pardir, "BENCH_serve.json")
     with open(os.path.normpath(path), "w") as f:
@@ -539,6 +644,11 @@ def run(quick: bool = True):
     rows.extend(_prefix_cache_rows(cfg, params, scheme, dp_detail, smoke))
     rows.append(_latency_policy_row(cfg, params, scheme, dp_detail, smoke))
 
+    # --- streaming HTTP frontend (bridge thread + SSE over localhost);
+    # runs under --smoke so CI exercises the full stack ---------------------
+    fe_row, fe_detail = _frontend_section(cfg, params, scheme, smoke)
+    rows.append(fe_row)
+
     # --- self-speculative decoding (needs >= 2 layers for a prefix draft) ---
     spec_cfg = (bench_cfg(d_model=128, n_layers=2, vocab=256, d_ff=256)
                 if smoke else cfg)
@@ -570,5 +680,6 @@ def run(quick: bool = True):
                      f"slots=4 finished={st['finished']}"))
     _emit_bench_json(dp_detail, rows, smoke, observability=observability,
                      quant_health=_quant_health(smoke),
-                     kv_quant=_kv_quant_section(smoke))
+                     kv_quant=_kv_quant_section(smoke),
+                     frontend=fe_detail)
     return rows

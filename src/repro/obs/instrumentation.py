@@ -168,6 +168,30 @@ class Instrumentation:
             "accepted draft tokens per (slot, round)",
             buckets=_SPEC_BUCKETS)
 
+        # -- structured rejections / cancellations (reason-labelled; the
+        #    legacy stats view keeps its fixed key set, so per-reason
+        #    breakdown lives here instead of new stats keys) ---------------
+        self.reject_reasons = reg.counter(
+            "serve_rejections_total",
+            "engine admission rejections by reason "
+            "(queue_full | unservable)", labels=("reason",))
+        self.cancel_reasons = reg.counter(
+            "serve_cancellations_total",
+            "engine cancellations by reason "
+            "(cancelled | disconnected | requeued)", labels=("reason",))
+
+        # -- streaming frontend (serve/frontend.py) -----------------------
+        self.streams_open = reg.gauge(
+            "serve_frontend_streams_open", "live SSE streams")
+        self.streamed_tokens = reg.counter(
+            "serve_frontend_streamed_tokens_total",
+            "tokens flushed to SSE streams")
+        self.frontend_rejects = reg.counter(
+            "serve_frontend_rejections_total",
+            "frontend-side rejections by reason (backpressure | "
+            "rate_limited | budget_exhausted | draining)",
+            labels=("reason",))
+
     # ---- engine.stats compatibility -------------------------------------
 
     def stats_view(self) -> "_StatsView":
@@ -181,6 +205,7 @@ class Instrumentation:
         self._live[req.req_id] = tr
 
     def on_reject(self, req, reason: str, t: float) -> None:
+        self.reject_reasons.labels(reason=reason).inc()
         tr = tracing.RequestTrace(req.req_id)  # -1: rejected pre-id
         tr.finish(tracing.REJECTED, t)
         tr.spans[-1].attrs["reason"] = reason
@@ -221,11 +246,51 @@ class Instrumentation:
         self.latency_hist.observe(result.latency_s)
         self.trace_sink.append(tr)
 
-    def on_cancel(self, req, t: float) -> None:
+    def on_cancel(self, req, t: float, reason: str = "cancelled") -> None:
+        """Cancellation terminal. `reason` picks the terminal span name:
+        "disconnected" / "requeued" (the frontend's lifecycle states) map
+        to their own spans, anything else lands as `cancelled`."""
+        self.cancel_reasons.labels(reason=reason).inc()
         tr = self._live.pop(req.req_id, None)
         if tr is None:
             return
-        tr.finish(tracing.CANCELLED, t)
+        state = {"disconnected": tracing.DISCONNECTED,
+                 "requeued": tracing.REQUEUED}.get(reason, tracing.CANCELLED)
+        tr.finish(state, t)
+        self.trace_sink.append(tr)
+
+    # ---- streaming frontend (serve/frontend.py) --------------------------
+    # Trace-touching hooks (`_live`) are engine-thread-only — the frontend
+    # bridge invokes them from the engine tick thread (token hook / command
+    # queue). Metric-only hooks are lock-protected and safe from the asyncio
+    # thread (docs/CONVENTIONS.md §8).
+
+    def on_stream_open(self, req, t: float) -> None:
+        """First token delivered to a live consumer: opens the `streamed`
+        span (auto-closed by whichever terminal transition follows —
+        retire, disconnect, requeue, cancel). Engine-thread only."""
+        self.streams_open.inc(1)
+        tr = self._live.get(req.req_id)
+        if tr is not None and tr.span(tracing.STREAMED) is None:
+            tr.begin(tracing.STREAMED, t)
+
+    def on_stream_close(self) -> None:
+        self.streams_open.inc(-1)
+
+    def on_stream_tokens(self, n: int) -> None:
+        if n:
+            self.streamed_tokens.inc(n)
+
+    def on_frontend_reject(self, reason: str) -> None:
+        """Frontend-side rejection: no engine Request exists yet (drain
+        mode, tenant rate limit/budget, admission backpressure), so this
+        books only the reason-labelled counter — no trace."""
+        self.frontend_rejects.labels(reason=reason).inc()
+
+    def on_drain(self, t: float) -> None:
+        """Drain completed (engine thread): point `drained` marker trace."""
+        tr = tracing.RequestTrace(-1)
+        tr.finish(tracing.DRAINED, t)
         self.trace_sink.append(tr)
 
     # ---- step timing -----------------------------------------------------

@@ -10,9 +10,12 @@ engine's host-side transition points —
           (event)            (terminal event, open span closed)
 
 plus point events (`prefill_skipped` for prefix-cache hits, `rejected` with
-a reason). Timestamps are `time.perf_counter()` floats stamped by the
-engine — the monotonic clock the engine already uses for `arrival_s` — so
-span boundaries are directly comparable to `RequestResult.finish_s`.
+a reason) and the frontend lifecycle spans (`streamed`, `disconnected`,
+`requeued`, `drained` — serve/frontend.py). Timestamps are monotonic floats
+stamped by the engine's injectable clock (`EngineConfig.clock`;
+`time.perf_counter` by default — the same clock that stamps `arrival_s`),
+so span boundaries are directly comparable to `RequestResult.finish_s` and
+fake-clock tests never need real sleeps.
 
 Traces are host-only bookkeeping: no device interaction, no effect on any
 compiled step (tests/test_obs.py asserts greedy streams are bitwise
@@ -28,6 +31,13 @@ import json
 #: span / terminal-state names (the JSONL schema's `span` field)
 QUEUED, PREFILL, DECODE = "queued", "prefill", "decode"
 RETIRED, CANCELLED, REJECTED = "retired", "cancelled", "rejected"
+#: frontend lifecycle (serve/frontend.py): `streamed` is an interval span
+#: opened at the first token delivered to a live consumer (auto-closed by
+#: whatever terminal transition follows); `disconnected` / `requeued` are
+#: terminal states for consumer-vanished / visibility-timeout cancellations;
+#: `drained` marks a completed drain (point event, req_id -1).
+STREAMED = "streamed"
+DISCONNECTED, REQUEUED, DRAINED = "disconnected", "requeued", "drained"
 
 
 class Span:

@@ -6,7 +6,17 @@ model code can reach `repro.serve.kv_pool` without cycles):
     engine      — ServeEngine: continuous batching, admission control, slots;
                   EngineConfig.mesh switches on mesh-sharded multi-host
                   mode, .prefix_cache on prompt-prefix sharing, .scheduler
-                  swaps the admission/prefill policy
+                  swaps the admission/prefill policy, .clock injects a
+                  monotonic time source, .token_hook streams tokens out at
+                  tick boundaries; structured QueueFull/Unservable
+                  rejections carry reason + retry-after
+    frontend    — asyncio HTTP/SSE frontend (OpenAI-style /v1/completions):
+                  EngineBridge hosts the engine on its own thread (the
+                  only engine toucher — docs/CONVENTIONS.md §8) behind a
+                  command queue; StreamHandle per-request mailboxes;
+                  disconnect cancel, visibility-timeout requeue with exact
+                  resume, tenant rate/budget quotas, backpressure 429s,
+                  graceful drain
     kv_pool     — block-based paged KV pool + per-sequence block tables,
                   refcounted blocks with adopt_prefix / cow_block aliasing,
                   truncate/rollback API, recurrent-state snapshots,

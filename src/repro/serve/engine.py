@@ -56,7 +56,38 @@ FREE, PREFILL, DECODE = "free", "prefill", "decode"
 
 
 class QueueFull(RuntimeError):
-    """Admission control: the request queue is at capacity."""
+    """Admission control: the request queue is at capacity.
+
+    Structured rejection: carries machine-readable fields (`reason`,
+    `queue_depth`, `retry_after_s`) so the HTTP frontend can build a 429 +
+    Retry-After — and the obs layer a reason-labelled rejection counter —
+    from the exception itself instead of parsing a message string.
+    `info()` is the JSON-safe dict both consume."""
+
+    reason = "queue_full"
+
+    def __init__(self, msg: str = "", *, reason: str | None = None,
+                 queue_depth: int = 0, retry_after_s: float | None = None):
+        super().__init__(msg)
+        if reason is not None:
+            self.reason = reason
+        self.queue_depth = queue_depth
+        self.retry_after_s = retry_after_s
+
+    def info(self) -> dict:
+        return {"reason": self.reason, "queue_depth": self.queue_depth,
+                "retry_after_s": self.retry_after_s}
+
+
+class Unservable(QueueFull, ValueError):
+    """A request no pool state can ever back (rejected at submit so it never
+    head-of-line blocks). ValueError-compatible for legacy callers; carries
+    the same structured fields as QueueFull with `retry_after_s=None` —
+    retrying an unservable request is pointless by definition. (QueueFull
+    leads the MRO so its keyword-aware __init__ wins over ValueError's
+    C-level one.)"""
+
+    reason = "unservable"
 
 
 @dataclass
@@ -154,6 +185,19 @@ class EngineConfig:
     # site and token streams are bitwise identical to the uninstrumented
     # engine (tests/test_obs.py).
     obs: Any = None
+    # injectable monotonic clock (() -> float seconds). None resolves to
+    # time.perf_counter. EVERY engine timestamp flows through it — arrival
+    # stamps, scheduler `now`, trace span boundaries, step timers — so
+    # deadline-slack, aging-bound, and the frontend's visibility-timeout
+    # logic are testable with a fake clock instead of real sleeps.
+    clock: Any = None
+    # per-token emission hook: callable(req, new_tokens, result) invoked
+    # from host tick boundaries whenever a slot's generated stream grows
+    # (result is the RequestResult at retirement, None otherwise). This is
+    # what the streaming frontend (serve/frontend.py) rides — without it
+    # tokens only surface at retirement. Reassignable post-construction via
+    # `engine.token_hook`; called on whichever thread steps the engine.
+    token_hook: Any = None
 
     def resolved_paged_kernel(self) -> bool:
         if self.paged_kernel is None:
@@ -169,6 +213,8 @@ class _Slot:
     length: int = 0               # tokens currently in the cache
     last_tok: int = 0
     generated: list[int] = field(default_factory=list)
+    emitted: int = 0              # generated tokens already flushed through
+    #                               the per-token hook (engine.token_hook)
     draft_len: int = 0            # tokens the spec draft has consumed
     prefix_len: int = 0           # prompt tokens adopted from the prefix
     #                               cache (cursor starts here; their prefill
@@ -184,6 +230,10 @@ class ServeEngine:
         self.cfg = cfg
         self.econf = econf or EngineConfig()
         e = self.econf
+        # one monotonic clock for every engine timestamp (EngineConfig.clock;
+        # the frontend bridge shares it for visibility-timeout bookkeeping)
+        self.clock = e.clock if e.clock is not None else time.perf_counter
+        self.token_hook = e.token_hook
         # observability: resolved FIRST so prequantization can report its
         # weight-quantization health through the probe
         self.obs = e.obs if e.obs is not None else NULL
@@ -298,49 +348,63 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def submit(self, request: Request) -> int:
-        """Queue a request; raises QueueFull when at capacity."""
-        if len(self.queue) >= self.econf.max_queue:
-            self.stats["rejected"] += 1
-            if self.obs.enabled:
-                self.obs.on_reject(request, "queue_full", time.perf_counter())
-            raise QueueFull(f"queue at capacity ({self.econf.max_queue})")
+        """Queue a request; raises QueueFull (structured: reason / queue
+        depth / suggested retry_after_s) at capacity, Unservable (a
+        QueueFull AND ValueError) when no pool state can ever back it."""
         total = len(request.prompt) + request.max_new + self._margin
         if not self.pool.can_ever_admit(total, self._max_growth):
             # reject now: an unservable request would head-of-line block the
             # FIFO forever (can_admit never becomes true)
             self.stats["rejected"] += 1
-            if self.obs.enabled:
-                self.obs.on_reject(request, "unservable", time.perf_counter())
             bound = (f"{self.pool.blocks_per_shard} blocks per shard "
                      f"(slot-affine, {self.pool.n_shards} shards)"
                      if self.pool.n_shards > 1
                      else f"{self.pool.n_blocks} blocks")
-            raise ValueError(
+            exc = Unservable(
                 f"request needs {total} positions "
                 f"({self.pool.max_live_blocks(total, self._max_growth)} live "
                 f"blocks) but the pool serves at most "
-                f"max_len={self.econf.max_len} / {bound}")
+                f"max_len={self.econf.max_len} / {bound}",
+                queue_depth=len(self.queue))
+            if self.obs.enabled:
+                self.obs.on_reject(request, exc.reason, self.clock())
+            raise exc
+        if len(self.queue) >= self.econf.max_queue:
+            # checked AFTER unservability: a permanent rejection must not
+            # masquerade as a transient queue-full when the queue happens
+            # to be saturated (clients would retry forever)
+            self.stats["rejected"] += 1
+            exc = QueueFull(
+                f"queue at capacity ({self.econf.max_queue})",
+                queue_depth=len(self.queue),
+                retry_after_s=self.suggested_retry_after_s())
+            if self.obs.enabled:
+                self.obs.on_reject(request, exc.reason, self.clock())
+            raise exc
         request.req_id = next(self._ids)
-        request.arrival_s = time.perf_counter()
+        request.arrival_s = self.clock()
         self.queue.append(request)
         if self.obs.enabled:
             self.obs.on_submit(request, request.arrival_s)
         return request.req_id
 
-    def cancel(self, req_id: int) -> bool:
+    def cancel(self, req_id: int, reason: str = "cancelled") -> bool:
         """Best-effort cancellation: remove a QUEUED request, or free the
         slot of an in-flight one (its committed KV prefix is inserted into
         the prefix cache first — the tokens were paid for; a resubmission
-        reuses them). Returns False when `req_id` is unknown (already
-        retired, rejected, or never submitted)."""
-        t = time.perf_counter()
+        reuses them). `reason` labels the trace span / metrics
+        ("cancelled" | "disconnected" | "requeued" — the frontend's
+        lifecycle states all funnel through this one reclaim path).
+        Returns False when `req_id` is unknown (already retired, rejected,
+        or never submitted)."""
+        t = self.clock()
         for r in self.queue:
             if r.req_id == req_id:
                 self.queue.remove(r)
                 self._matches.pop(req_id, None)
                 self.stats["cancelled"] += 1
                 if self.obs.enabled:
-                    self.obs.on_cancel(r, t)
+                    self.obs.on_cancel(r, t, reason=reason)
                 return True
         for i, s in enumerate(self.slots):
             if s.req is not None and s.req.req_id == req_id:
@@ -357,9 +421,23 @@ class ServeEngine:
                 self.slots[i] = _Slot()
                 self.stats["cancelled"] += 1
                 if self.obs.enabled:
-                    self.obs.on_cancel(s.req, t)
+                    self.obs.on_cancel(s.req, t, reason=reason)
                 return True
         return False
+
+    def suggested_retry_after_s(self) -> float:
+        """Backpressure hint for rejected clients: seconds until the engine
+        has plausibly worked the backlog down. Estimated as the queued +
+        in-flight generated-token backlog over the decode rate observed so
+        far, clamped to [0.5, 60]; 1.0 before any decode step has run."""
+        if self.stats["decode_tokens"] <= 0:
+            return 1.0
+        backlog = sum(r.max_new for r in self.queue)
+        for s in self.slots:
+            if s.req is not None:
+                backlog += max(s.req.max_new - len(s.generated), 0)
+        rate = self.stats["decode_tokens"] / max(self.stats["decode_s"], 1e-9)
+        return float(min(max(backlog / max(rate, 1e-9), 0.5), 60.0))
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(s.state != FREE for s in self.slots)
@@ -395,10 +473,10 @@ class ServeEngine:
         if self.obs.enabled:
             # queue depth / aging / slack gauges — the policy object knows
             # its own urgency model, so IT reports (scheduler.py observe)
-            self.sched.observe(self.obs, self.queue, time.perf_counter())
+            self.sched.observe(self.obs, self.queue, self.clock())
         if not self.queue:
             return
-        now = time.perf_counter()
+        now = self.clock()
         if self.cache is not None and not self.sched.head_of_line:
             # cache-aware admission ordering: a large cached prefix makes a
             # request cheap to admit (its prefill is mostly skipped).
@@ -485,7 +563,7 @@ class ServeEngine:
                               prefix_len=prefix_len, cache_nodes=nodes)
         self.stats["admitted"] += 1
         if self.obs.enabled:
-            self.obs.on_admit(req, i, prefix_len, time.perf_counter())
+            self.obs.on_admit(req, i, prefix_len, self.clock())
         if self.cache is not None:
             # hit-rate stats book exactly once per ADMITTED request (a
             # deferred request re-matches every tick; recording those
@@ -553,7 +631,7 @@ class ServeEngine:
         # picked keep aging, so preemption is starvation-free too: a
         # low-priority prompt passed over by a stream of critical arrivals
         # grows its effective priority until it wins the pick.
-        i = self.sched.pick_prefill(cands, time.perf_counter())
+        i = self.sched.pick_prefill(cands, self.clock())
         for j, s in cands:
             if j != i:
                 s.req.queued_ticks += 1
@@ -572,15 +650,15 @@ class ServeEngine:
             pos[i] = slot.draft_len
             active = np.zeros((e.n_slots,), bool)
             active[i] = True
-            t0 = time.perf_counter()
+            t0 = self.clock()
             self.draft.pool.ensure(i, slot.draft_len + size)
             out = self.draft.forward(size, tokens, pos, active)
-            t_disp = time.perf_counter() - t0
+            t_disp = self.clock() - t0
             # sync the draft CACHE writes too, not just the logits — an
             # async cache write landing after the timer stops would be
             # billed to whatever step happens to sync next
             jax.block_until_ready((out, self.draft.pool.caches))
-            t_sync = time.perf_counter() - t0
+            t_sync = self.clock() - t0
             self.stats["prefill_s"] += t_sync
             if self.obs.enabled:
                 self.obs.on_prefill_step(t_disp, t_sync)
@@ -596,7 +674,7 @@ class ServeEngine:
         pos[i] = slot.cursor
         active = np.zeros((e.n_slots,), bool)
         active[i] = True
-        t0 = time.perf_counter()
+        t0 = self.clock()
         logits = self._forward(size, tokens, pos, active)
         if self.draft is not None:
             # the draft cache covers the prompt too: same chunk through
@@ -604,7 +682,7 @@ class ServeEngine:
             # draft_layers of the full forward just computed)
             self.draft.pool.ensure(i, slot.cursor + size)
             self.draft.forward(size, tokens, pos, active)
-        t_disp = time.perf_counter() - t0
+        t_disp = self.clock() - t0
         # sync logits AND the cache pytrees: blocking on logits alone lets
         # the (donated, in-place) KV scatter complete asynchronously AFTER
         # the timer stops, under-reporting prefill_s and leaking device
@@ -613,7 +691,7 @@ class ServeEngine:
         if self.draft is not None:
             sync.append(self.draft.pool.caches)
         jax.block_until_ready(sync)
-        t_sync = time.perf_counter() - t0
+        t_sync = self.clock() - t0
         self.stats["prefill_s"] += t_sync
         self.stats["prefill_tokens"] += size
         self.stats["prefill_steps"] += 1
@@ -630,7 +708,8 @@ class ServeEngine:
             slot.last_tok = tok
             slot.generated.append(tok)
             if self.obs.enabled:
-                self.obs.on_first_token(slot.req, time.perf_counter())
+                self.obs.on_first_token(slot.req, self.clock())
+            self._flush(i)
         return  # bounded work: one chunk per tick
 
     def _decode_tick(self) -> list[RequestResult]:
@@ -645,7 +724,7 @@ class ServeEngine:
                 res = RequestResult(
                     slot.req.req_id, list(slot.req.prompt),
                     list(slot.generated), arrival_s=slot.req.arrival_s,
-                    finish_s=time.perf_counter(),
+                    finish_s=self.clock(),
                     deadline_s=slot.req.deadline_s)
                 if self.obs.enabled:
                     # closes the trace and surfaces queue-wait / TTFT /
@@ -653,6 +732,7 @@ class ServeEngine:
                     self.obs.on_retire(slot.req, res, len(slot.generated),
                                        res.finish_s)
                 finished.append(res)
+                self._flush(i, res)
                 if self.cache is not None:
                     # cache the completed stream's full blocks, then drop
                     # this slot's pins — BEFORE release, while the blocks
@@ -671,19 +751,21 @@ class ServeEngine:
             return finished
 
         if e.spec_k > 0:
-            t0 = time.perf_counter()
+            t0 = self.clock()
             emitted = spec_decode.spec_round(self, dec)
-            t_disp = time.perf_counter() - t0
+            t_disp = self.clock() - t0
             # the whole cache pytree, not just the first leaf: truncate
             # rewrites tables but layer caches past leaf 0 may still have
             # in-flight scatters when the timer stops
             jax.block_until_ready(self.pool.caches)
-            t_sync = time.perf_counter() - t0
+            t_sync = self.clock() - t0
             self.stats["decode_s"] += t_sync
             self.stats["decode_tokens"] += emitted
             self.stats["decode_steps"] += 1
             if self.obs.enabled:
                 self.obs.on_decode_step(t_disp, t_sync)
+            for i in dec:
+                self._flush(i)
             return finished
 
         tokens = np.zeros((e.n_slots, 1), np.int32)
@@ -695,14 +777,14 @@ class ServeEngine:
             tokens[i, 0] = slot.last_tok
             pos[i] = slot.length
             active[i] = True
-        t0 = time.perf_counter()
+        t0 = self.clock()
         logits = self._forward(1, tokens, pos, active)
         toks = self._sample(logits[:, -1])
-        t_disp = time.perf_counter() - t0
+        t_disp = self.clock() - t0
         # sync tokens AND cache writes (same leak as prefill: the donated
         # cache scatter may outlive the token fetch)
         jax.block_until_ready((toks, self.pool.caches))
-        t_sync = time.perf_counter() - t0
+        t_sync = self.clock() - t0
         self.stats["decode_s"] += t_sync
         self.stats["decode_tokens"] += len(dec)
         self.stats["decode_steps"] += 1
@@ -713,7 +795,24 @@ class ServeEngine:
             slot.length += 1
             slot.last_tok = int(toks[i])
             slot.generated.append(slot.last_tok)
+            self._flush(i)
         return finished
+
+    def _flush(self, i: int, result: RequestResult | None = None) -> None:
+        """Push a slot's un-emitted generated tokens through the per-token
+        hook (EngineConfig.token_hook / engine.token_hook). Called ONLY at
+        host tick boundaries — after the prefill-completion sample, after a
+        decode/spec round's appends, and at retirement (`result` then
+        carries the final RequestResult alongside any remaining tokens) —
+        so between ticks `emitted == len(generated)` always holds and a
+        cancel landing between ticks never strands tokens."""
+        if self.token_hook is None:
+            return
+        s = self.slots[i]
+        new = s.generated[s.emitted:]
+        if new or result is not None:
+            s.emitted = len(s.generated)
+            self.token_hook(s.req, new, result)
 
     # ------------------------------------------------------------------
     # jitted steps

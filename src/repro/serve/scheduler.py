@@ -35,7 +35,10 @@ faster and reuses cached blocks before they age out.
 Determinism: policies are pure functions of (queue snapshot, tick
 counters, request fields); `now` is only consulted for deadline slack,
 and requests submitted before `run()` share one arrival-clock origin, so
-orderings are reproducible run-to-run.
+orderings are reproducible run-to-run. Policies never read a wall clock
+themselves: every `now` they see is `engine.clock()` (the injectable
+monotonic clock from `EngineConfig.clock`), so deadline-slack and aging
+behavior is drivable by a fake clock in tests — no real sleeps.
 """
 
 from __future__ import annotations

@@ -52,6 +52,18 @@ _OBS_SUITES = {"test_obs.py"}
 # decode kernels, kv_quant engine parity): `-m kvq` selects it, wired by path.
 _KVQ_SUITES = {"test_kv_quant.py"}
 
+# Streaming-frontend suites (asyncio HTTP/SSE server, engine-thread bridge,
+# cancellation races): `-m frontend` selects them, wired by path. These
+# tests get a hard per-test wall-clock guard (see `_frontend_timeout`) — a
+# wedged stream or deadlocked thread boundary fails fast instead of hanging
+# the whole tier-1 run.
+_FRONTEND_SUITES = {"test_frontend.py", "test_cancel_races.py"}
+
+#: per-test wall-clock ceiling for the frontend suites, seconds. Generous —
+#: normal tests finish in a few seconds even with XLA compiles; the guard
+#: exists to catch deadlocks/hangs, not slowness.
+FRONTEND_TEST_TIMEOUT_S = 180
+
 
 def pytest_collection_modifyitems(config, items):
     for item in items:
@@ -65,6 +77,38 @@ def pytest_collection_modifyitems(config, items):
             item.add_marker(pytest.mark.obs)
         if item.fspath.basename in _KVQ_SUITES:
             item.add_marker(pytest.mark.kvq)
+        if item.fspath.basename in _FRONTEND_SUITES:
+            item.add_marker(pytest.mark.frontend)
+            item.add_marker(pytest.mark.usefixtures("_frontend_timeout"))
+
+
+@pytest.fixture()
+def _frontend_timeout():
+    """SIGALRM-based per-test timeout for the frontend suites (no external
+    timeout plugin in the image). Applied via marker wiring above, main
+    thread only — SIGALRM interrupts a hung `asyncio.run` / `Event.wait`
+    with a loud failure instead of wedging CI. No-op off-POSIX or when a
+    previous alarm is pending (never clobber someone else's timer)."""
+    import signal
+
+    if (not hasattr(signal, "SIGALRM")
+            or signal.getsignal(signal.SIGALRM) not in
+            (signal.SIG_DFL, signal.SIG_IGN, None)):
+        yield
+        return
+
+    def _fail(signum, frame):
+        raise TimeoutError(
+            f"frontend test exceeded {FRONTEND_TEST_TIMEOUT_S}s wall clock "
+            "(deadlocked stream/bridge?)")
+
+    old = signal.signal(signal.SIGALRM, _fail)
+    signal.alarm(FRONTEND_TEST_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
 
 
 @pytest.fixture(scope="session")

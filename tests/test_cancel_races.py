@@ -1,0 +1,259 @@
+"""Cancellation-race coverage (ISSUE satellite): `cancel()` landing at
+every phase boundary of a request's lifecycle.
+
+The engine tick is host-atomic — `cancel()` can only ever land BETWEEN
+`_admit` / `_prefill_tick` / `_decode_tick` phases, never inside one — so
+the race surface is exactly the phase boundaries. Each test drives the
+engine's phases by hand to freeze a request at one boundary, cancels
+there, and asserts the two robustness invariants the frontend relies on:
+
+  1. Pool conservation: every block is free or held by the prefix cache
+     (refcounts partition the pool; nothing leaks to the dead request).
+  2. Prefix reuse: the committed partial prefix hot-hits on resubmission —
+     cancelled work is cached, not discarded (cache-insert-then-release).
+
+Driven with a fake clock throughout (clock-discipline satellite): no test
+here sleeps or reads the wall clock.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import lm
+from repro.serve.engine import DECODE, PREFILL, EngineConfig, Request, \
+    ServeEngine
+
+pytestmark = pytest.mark.serve
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        self.t += 1e-6  # strictly monotonic, deterministic
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return registry.get("yi_9b").reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return lm.init(cfg, jax.random.PRNGKey(0))
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("prefix_cache", True)
+    kw.setdefault("clock", FakeClock())
+    return ServeEngine(cfg, params, EngineConfig(**kw))
+
+
+def _prompt(cfg, n=24, seed=1):
+    rng = np.random.RandomState(seed)
+    return list(map(int, rng.randint(0, cfg.vocab, n)))
+
+
+def _assert_conserved(eng):
+    """Every pool block is free xor referenced, and the referenced ones are
+    exactly the prefix cache's holdings once no slot is live."""
+    held = eng.cache.cached_blocks() if eng.cache is not None else 0
+    assert eng.pool.free_block_count + held == eng.pool.n_blocks
+    ref_blocks = sum(1 for b in range(eng.pool.n_blocks)
+                     if eng.pool.refcount(b) > 0)
+    assert ref_blocks == held
+
+
+def _slot_of(eng, rid):
+    for i, s in enumerate(eng.slots):
+        if s.req is not None and s.req.req_id == rid:
+            return i
+    return None
+
+
+# --------------------------------------------------------------------------
+# race 1: cancel between _admit and the FIRST _prefill_tick
+# --------------------------------------------------------------------------
+
+
+def test_cancel_between_admit_and_first_prefill(cfg, params):
+    eng = _engine(cfg, params)
+    rid = eng.submit(Request(prompt=_prompt(cfg), max_new=8))
+    eng._admit()  # slot placed + blocks committed, zero tokens written
+    i = _slot_of(eng, rid)
+    assert i is not None and eng.slots[i].state == PREFILL
+    assert eng.slots[i].cursor == 0
+
+    assert eng.cancel(rid)
+    assert eng.stats["cancelled"] == 1
+    assert not eng.has_work()
+    # nothing was written, so nothing is cacheable — but the COMMITTED
+    # blocks must all return to the free lists
+    _assert_conserved(eng)
+    assert eng.cache.cached_blocks() == 0
+
+    # the engine is fully usable afterwards: same prompt runs cold
+    rid2 = eng.submit(Request(prompt=_prompt(cfg), max_new=4))
+    res = {r.req_id: r for r in eng.run()}
+    assert len(res[rid2].tokens) == 4
+    assert eng.stats["prefix_hits"] == 0  # nothing was cached to hit
+
+
+def test_cancel_queued_request_never_touches_pool(cfg, params):
+    eng = _engine(cfg, params)
+    rid = eng.submit(Request(prompt=_prompt(cfg), max_new=8))
+    assert eng.cancel(rid)  # still queued: pure bookkeeping
+    assert eng.pool.free_block_count == eng.pool.n_blocks
+    assert not eng.has_work()
+    assert not eng.cancel(rid)  # idempotent: unknown id now
+
+
+# --------------------------------------------------------------------------
+# race 2: cancel DURING a chunked prefill (cursor mid-prompt)
+# --------------------------------------------------------------------------
+
+
+def test_cancel_mid_chunked_prefill_caches_partial_prefix(cfg, params):
+    eng = _engine(cfg, params)  # chunk 8, prompt 24 -> 3 chunks
+    prompt = _prompt(cfg)
+    rid = eng.submit(Request(prompt=list(prompt), max_new=8))
+    eng._admit()
+    i = _slot_of(eng, rid)
+    eng._prefill_tick()  # chunk 1 of 3
+    eng._prefill_tick()  # chunk 2 of 3
+    slot = eng.slots[i]
+    assert slot.state == PREFILL and 0 < slot.cursor < len(prompt)
+    written = eng.pool.length(i)
+    assert written == 16  # two full chunks committed to the cache
+
+    assert eng.cancel(rid)
+    _assert_conserved(eng)
+    # the partial prefix was inserted: 16 written tokens = 1 full block
+    # (block_size 16); partial blocks are never cached
+    assert eng.cache.cached_blocks() == written // eng.pool.block_size
+
+    # resubmission hot-hits the cancelled request's partial prefill
+    rid2 = eng.submit(Request(prompt=list(prompt), max_new=8))
+    res = {r.req_id: r for r in eng.run()}
+    assert eng.stats["prefix_hits"] == 1
+    assert eng.stats["prefill_skipped_tokens"] == 16
+    assert len(res[rid2].tokens) == 8
+    _assert_conserved(eng)
+
+
+# --------------------------------------------------------------------------
+# race 3: cancel MID-DECODE (generated tokens in flight)
+# --------------------------------------------------------------------------
+
+
+def test_cancel_mid_decode_caches_prompt_plus_generated(cfg, params):
+    eng = _engine(cfg, params)
+    prompt = _prompt(cfg)
+    # reference stream for the exactness check below
+    ref_rid = eng.submit(Request(prompt=list(prompt), max_new=8))
+    ref = {r.req_id: r.tokens for r in eng.run()}[ref_rid]
+    eng2 = _engine(cfg, params)
+
+    rid = eng2.submit(Request(prompt=list(prompt), max_new=8))
+    while True:  # step into decode with >= 2 generated tokens
+        eng2.step()
+        i = _slot_of(eng2, rid)
+        if i is not None and eng2.slots[i].state == DECODE \
+                and len(eng2.slots[i].generated) >= 2:
+            break
+    gen = list(eng2.slots[i].generated)
+    assert eng2.cancel(rid)
+    assert eng2.stats["cancelled"] == 1
+    _assert_conserved(eng2)
+    # prompt + generated tokens were cached up to the written length's
+    # block boundary — the decode work survives the cancel
+    assert eng2.cache.cached_blocks() >= 1
+
+    # a follow-up over prompt + generated continues BITWISE on the cached
+    # prefix: the cancelled stream's tokens were not wasted
+    rid2 = eng2.submit(Request(prompt=prompt + gen, max_new=8 - len(gen)))
+    res = {r.req_id: r for r in eng2.run()}
+    assert eng2.stats["prefix_hits"] == 1
+    assert eng2.stats["prefill_skipped_tokens"] > 0
+    assert gen + res[rid2].tokens == ref
+    _assert_conserved(eng2)
+
+
+def test_cancel_one_of_many_leaves_neighbors_bitwise_intact(cfg, params):
+    """Row-local decode contract under cancellation: killing one slot
+    mid-decode must not perturb any other slot's stream.
+
+    Runs under scheme="bf16": the row-local bitwise claim only holds there
+    (CONVENTIONS SS3 — quartet2's per-tensor activation absmax is
+    batch-coupled by design, so its guarantee is determinism, not
+    neighbor-independence)."""
+    rng = np.random.RandomState(3)
+    prompts = [list(map(int, rng.randint(0, cfg.vocab, n)))
+               for n in (9, 13, 11)]
+    ref_eng = _engine(cfg, params, n_slots=3, prefix_cache=False,
+                      scheme="bf16")
+    ids = [ref_eng.submit(Request(prompt=list(p), max_new=8))
+           for p in prompts]
+    ref = {r.req_id: r.tokens for r in ref_eng.run()}
+    ref_tokens = [ref[i] for i in ids]
+
+    eng = _engine(cfg, params, n_slots=3, prefix_cache=False,
+                  scheme="bf16")
+    ids = [eng.submit(Request(prompt=list(p), max_new=8)) for p in prompts]
+    early = []
+    while True:  # victim decoding, every live slot decoding
+        early.extend(eng.step())
+        v = _slot_of(eng, ids[1])
+        if v is not None and eng.slots[v].state == DECODE \
+                and all(s.state == DECODE for s in eng.slots
+                        if s.req is not None):
+            break
+    eng.cancel(ids[1])
+    res = {r.req_id: r for r in early + eng.run()}
+    assert res[ids[0]].tokens == ref_tokens[0]
+    assert res[ids[2]].tokens == ref_tokens[2]
+    assert ids[1] not in res
+    assert eng.pool.free_block_count == eng.pool.n_blocks
+
+
+# --------------------------------------------------------------------------
+# cancel vs retirement: the losing side must be a clean no-op
+# --------------------------------------------------------------------------
+
+
+def test_cancel_after_retirement_is_noop(cfg, params):
+    eng = _engine(cfg, params)
+    rid = eng.submit(Request(prompt=_prompt(cfg, n=9), max_new=4))
+    res = eng.run()
+    assert len(res) == 1
+    assert not eng.cancel(rid)  # already retired: False, no state change
+    assert eng.stats["cancelled"] == 0
+    _assert_conserved(eng)
+
+
+def test_cancel_storm_conserves_pool(cfg, params):
+    """Admit/cancel churn at every phase: after any interleaving, blocks
+    partition into free + cached and the engine still serves."""
+    eng = _engine(cfg, params, n_slots=2)
+    rng = np.random.RandomState(7)
+    for round_ in range(6):
+        prompt = list(map(int, rng.randint(0, cfg.vocab, 17 + round_)))
+        rid = eng.submit(Request(prompt=prompt, max_new=6))
+        for _ in range(round_):  # cancel later and later each round
+            if eng.has_work():
+                eng.step()
+        eng.cancel(rid)
+        while eng.has_work():  # drain any still-running work
+            eng.step()
+        _assert_conserved(eng)
+    final = eng.submit(Request(prompt=_prompt(cfg, n=9, seed=9), max_new=4))
+    res = {r.req_id: r for r in eng.run()}
+    assert len(res[final].tokens) == 4
+    _assert_conserved(eng)
