@@ -37,6 +37,19 @@ Rows (tok/s = generated tokens per wall-second of decode):
                              aliases the cached prompt blocks read-only and
                              skips that prefill (reports tokens skipped and
                              hit rate) — the prefix-sharing win
+  serve/prefix_zipf_drop   — Zipf multi-tenant workload (shared per-tenant
+                             system prompts, Zipf(1.1) tenant popularity,
+                             deterministic seed) on a DELIBERATELY small
+                             pool: prefix cache ON, spill tier OFF, so
+                             eviction under pressure discards prefixes
+  serve/prefix_zipf_spill  — the same workload, byte for byte, with the
+                             host-RAM spill tier ON: eviction snapshots to
+                             host and a later tenant recurrence swaps the
+                             prefix back in instead of re-prefilling.
+                             Reports hit-rate, swap-in stall fraction and
+                             p50/p99 latency; BENCH_serve.json's
+                             `prefix_tiers` section pins spill > drop on
+                             hit-rate (the hierarchical-cache win)
   serve/frontend_stream    — the asyncio HTTP frontend end-to-end: SSE
                              streaming clients over localhost with the
                              engine on its bridge thread; one client is
@@ -309,6 +322,101 @@ def _prefix_cache_rows(cfg, params, scheme, detail, smoke):
     return rows
 
 
+def _zipf_tenant_workload(cfg, n_req, n_tenants, smoke, seed=23,
+                          exponent=1.1):
+    """Multi-tenant request mix: each tenant owns one shared system prompt;
+    tenant popularity is Zipf(`exponent`) (a few hot tenants dominate, a
+    long tail recurs rarely — the regime a hierarchical cache exists for).
+    Deterministic: everything derives from `seed`."""
+    rng = np.random.RandomState(seed)
+    sys_len, suffix = (24, 4) if smoke else (32, 6)
+    systems = [list(map(int, rng.randint(0, cfg.vocab, sys_len)))
+               for _ in range(n_tenants)]
+    w = np.arange(1, n_tenants + 1, dtype=np.float64) ** -exponent
+    w /= w.sum()
+    tenants = rng.choice(n_tenants, size=n_req, p=w)
+    prompts = [systems[t]
+               + list(map(int, rng.randint(0, cfg.vocab, suffix)))
+               for t in tenants]
+    return prompts, tenants.tolist()
+
+
+def _reset_cache_cold(eng):
+    """True cold start: free every cache-held device block, drop host-tier
+    husks, zero cache + engine stats (warmup must not count as a hit)."""
+    eng.cache.evict(None, eng.pool.n_blocks)
+    eng.cache.root.children.clear()   # host-only husks would still match
+    eng.cache.host_bytes = 0
+    eng.cache.epoch += 1
+    for k in eng.cache.stats:
+        eng.cache.stats[k] = 0.0 if isinstance(eng.cache.stats[k],
+                                               float) else 0
+    for k in eng.stats:
+        eng.stats[k] = 0 if isinstance(eng.stats[k], int) else 0.0
+
+
+def _prefix_tiers_rows(cfg, params, scheme, smoke):
+    """serve/prefix_zipf_{drop,spill}: the SAME Zipf multi-tenant closed-loop
+    batch through a small pool (constant eviction pressure), cache-drop vs
+    host-spill eviction. The comparison the spill tier exists for: with drop,
+    an evicted tenant prefix re-prefills on recurrence; with spill it swaps
+    back in from host RAM. Returns the two rows + the BENCH_serve.json
+    `prefix_tiers` section (hit-rate, stall fraction, p50/p99)."""
+    n_tenants = 6
+    n_req = 12 if smoke else 24
+    max_new = 4 if smoke else 6
+    prompts, tenants = _zipf_tenant_workload(cfg, n_req, n_tenants, smoke)
+    rows = []
+    section = {"tenants": n_tenants, "requests": n_req,
+               "zipf_exponent": 1.1, "hot_tenant_share":
+               round(tenants.count(0) / n_req, 3), "modes": {}}
+    for mode in ("drop", "spill"):
+        econf = EngineConfig(
+            # 2 slots x 64 positions / block 8 = a 16-block pool: two live
+            # ~32-token requests pin ~8, leaving room for ~2 tenants' worth
+            # of cached prefix — the other 4 keep getting evicted
+            n_slots=2, max_len=64, prefill_chunk=16, block_size=8,
+            paged=True, prequant=True, scheme=scheme, prefix_cache=True,
+            prefix_spill=mode == "spill")
+        eng = ServeEngine(cfg, params, econf)
+        _warm_and_reset(eng, prompts[0][:16], 2)
+        _reset_cache_cold(eng)
+        t0 = time.perf_counter()
+        for p in prompts:
+            eng.submit(Request(prompt=p, max_new=max_new))
+        results = eng.run()
+        wall = time.perf_counter() - t0
+        st, cs = eng.stats, dict(eng.cache.stats)
+        lats = sorted(r.latency_s for r in results)
+        p50 = lats[len(lats) // 2]
+        p99 = lats[min(len(lats) - 1, int(len(lats) * 0.99))]
+        hit_rate = cs["hits"] / max(cs["lookups"], 1)
+        busy = st["prefill_s"] + st["decode_s"]
+        stall = cs["swapin_s"] / max(busy, 1e-9)  # swap-ins are dispatched
+        rows.append((f"serve/prefix_zipf_{mode}", 1e6 * wall / n_req,
+                     f"hit_rate={hit_rate:.2f} "
+                     f"skipped={st['prefill_skipped_tokens']} "
+                     f"swap_stall={stall:.3f} p99_ms={p99 * 1e3:.1f}"))
+        section["modes"][mode] = {
+            "hit_rate": round(hit_rate, 4),
+            "hits": cs["hits"], "lookups": cs["lookups"],
+            "hit_tokens": cs["hit_tokens"],
+            "skipped_tokens": st["prefill_skipped_tokens"],
+            "evicted_blocks": cs["evicted_blocks"],
+            "spilled_blocks": cs["spilled_blocks"],
+            "swapped_in_blocks": cs["swapped_in_blocks"],
+            "swap_in_stall_frac": round(stall, 5),
+            "host_bytes_after": eng.cache.host_bytes,
+            "p50_ms": round(p50 * 1e3, 2),
+            "p99_ms": round(p99 * 1e3, 2),
+        }
+    d, s = section["modes"]["drop"], section["modes"]["spill"]
+    # the acceptance claim the JSON regresses: spill strictly beats drop
+    section["spill_hit_rate_gain"] = round(s["hit_rate"] - d["hit_rate"], 4)
+    section["spill_beats_drop"] = s["hit_rate"] > d["hit_rate"]
+    return rows, section
+
+
 def _latency_policy_row(cfg, params, scheme, detail, smoke):
     """serve/latency_deadline: a saturated mixed-priority batch under
     LatencyPolicy — p50/p99 completion latency and the fraction of
@@ -531,7 +639,8 @@ def _frontend_section(cfg, params, scheme, smoke):
 
 
 def _emit_bench_json(decode_paths, rows, smoke, observability=None,
-                     quant_health=None, kv_quant=None, frontend=None):
+                     quant_health=None, kv_quant=None, frontend=None,
+                     prefix_tiers=None):
     """BENCH_serve.json at the repo root: the serving bench trajectory
     artifact future PRs regress against."""
     payload = {
@@ -550,6 +659,8 @@ def _emit_bench_json(decode_paths, rows, smoke, observability=None,
         payload["kv_quant"] = kv_quant
     if frontend is not None:
         payload["frontend"] = frontend
+    if prefix_tiers is not None:
+        payload["prefix_tiers"] = prefix_tiers
     path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         os.pardir, "BENCH_serve.json")
     with open(os.path.normpath(path), "w") as f:
@@ -644,6 +755,11 @@ def run(quick: bool = True):
     rows.extend(_prefix_cache_rows(cfg, params, scheme, dp_detail, smoke))
     rows.append(_latency_policy_row(cfg, params, scheme, dp_detail, smoke))
 
+    # --- hierarchical cache tiers: Zipf multi-tenant drop-vs-spill; runs
+    # under --smoke so CI regresses the spill-beats-drop hit-rate claim ----
+    zipf_rows, prefix_tiers = _prefix_tiers_rows(cfg, params, scheme, smoke)
+    rows.extend(zipf_rows)
+
     # --- streaming HTTP frontend (bridge thread + SSE over localhost);
     # runs under --smoke so CI exercises the full stack ---------------------
     fe_row, fe_detail = _frontend_section(cfg, params, scheme, smoke)
@@ -681,5 +797,5 @@ def run(quick: bool = True):
     _emit_bench_json(dp_detail, rows, smoke, observability=observability,
                      quant_health=_quant_health(smoke),
                      kv_quant=_kv_quant_section(smoke),
-                     frontend=fe_detail)
+                     frontend=fe_detail, prefix_tiers=prefix_tiers)
     return rows

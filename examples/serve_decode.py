@@ -90,6 +90,16 @@ def main():
                          "the cache, then the N requests alias its blocks "
                          "read-only and skip that prefill — reports prefill "
                          "tokens skipped and the hit rate")
+    ap.add_argument("--spill-tier", type=int, default=0, metavar="N",
+                    help="hierarchical-cache demo: prime a shared system "
+                         "prompt, squeeze it out of the pool with filler "
+                         "traffic, then serve N requests over it — with "
+                         "the host spill tier the eviction snapshots the "
+                         "blocks to host RAM and the N requests swap them "
+                         "back in (zero prefill forwards over the prefix); "
+                         "reports spill/swap-in/replication stats next to "
+                         "the drop-on-evict baseline (compose with "
+                         "--data-shards 2 to see cross-shard replication)")
     ap.add_argument("--metrics", action="store_true",
                     help="run with the observability layer enabled "
                          "(obs/instrumentation.py): report TTFT/queue-wait "
@@ -107,6 +117,8 @@ def main():
     rng = np.random.RandomState(1)
     if args.shared_prefix > 0:
         return shared_prefix_demo(cfg, params, args, rng, backend)
+    if args.spill_tier > 0:
+        return spill_tier_demo(cfg, params, args, rng, backend)
     prompts = [list(map(int, rng.randint(0, cfg.vocab, s))) for _ in range(b)]
 
     if args.legacy:
@@ -246,6 +258,88 @@ def shared_prefix_demo(cfg, params, args, rng, backend):
               f"(rate {hit_rate:.2f}), {cst['hit_tokens']} tokens matched, "
               f"{cst['inserted_blocks']} blocks newly cached this wave, "
               f"{cst['evicted_blocks']} evicted")
+    print("sample token ids:", results[0].tokens[:12])
+
+
+def spill_tier_demo(cfg, params, args, rng, backend):
+    """--spill-tier N: a hot prefix is evicted under pool pressure, then
+    reused N times.
+
+    A prime request caches the shared system prompt; filler traffic then
+    squeezes the pool until the prefix's blocks are evicted. In drop mode
+    (prefix_spill=False, the baseline) the N follow-ups recompute the
+    prefix from scratch; with the host tier ON the eviction spilled the
+    bytes to host RAM, the nodes stayed matchable, and the follow-ups swap
+    them back in — zero prefill forwards over the matched prefix. With
+    --data-shards >= 2 the repeated hits also replicate the prefix into
+    peer shards (replicate_hits=2). Reported per mode: prefill tokens and
+    skips, plus the spill / swap-in / replication counters and the
+    host-tier byte count (serve/README 'Hierarchical cache &
+    disaggregation')."""
+    n, s = args.spill_tier, args.prompt_len
+    system = list(map(int, rng.randint(0, cfg.vocab, s)))
+    suffix, new = 4, min(args.tokens, 12)
+    prompts = [system + list(map(int, rng.randint(0, cfg.vocab, suffix)))
+               for _ in range(n)]
+    # enough distinct retired streams to overflow the 2*max_len/8-block
+    # pool and force the primed prefix out (LRU: it is the oldest node)
+    fillers = [list(map(int, rng.randint(0, cfg.vocab, s + 8)))
+               for _ in range(4)]
+    warm = list(map(int, rng.randint(0, cfg.vocab, 17)))
+    max_len = ((s + suffix + new) // 16 + 2) * 16
+    mesh = None
+    if args.data_shards > 1:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(args.data_shards, 1)
+
+    def serve(spill):
+        eng = ServeEngine(cfg, params, EngineConfig(
+            n_slots=2, max_len=max_len, prefill_chunk=16, block_size=8,
+            prequant=not args.no_prequant, scheme=args.scheme,
+            prefix_cache=True, prefix_spill=spill,
+            replicate_hits=2 if spill else None, mesh=mesh))
+        eng.submit(Request(prompt=list(warm), max_new=2))  # jit warmup
+        eng.run()
+        eng.submit(Request(prompt=list(system), max_new=1))  # prime
+        eng.run()
+        for _ in range(2):  # two hot hits arm cross-shard replication
+            eng.submit(Request(prompt=list(system), max_new=1))
+            eng.run()
+        for f in fillers:  # pool pressure: evicts (or spills) the prefix
+            eng.submit(Request(prompt=list(f), max_new=4))
+            eng.run()
+        spilled = eng.cache.stats["spilled_blocks"]
+        replicated = eng.cache.stats["replicated_blocks"]
+        for st in (eng.stats, eng.cache.stats):
+            for k in st:
+                st[k] = 0 if isinstance(st[k], int) else 0.0
+        t0 = time.perf_counter()
+        for p in prompts:
+            eng.submit(Request(prompt=list(p), max_new=new))
+        results = eng.run()
+        return eng, spilled, replicated, time.perf_counter() - t0, results
+
+    drop_eng, _, _, drop_wall, _ = serve(False)
+    hot_eng, spilled, replicated, hot_wall, results = serve(True)
+    st, cst = hot_eng.stats, hot_eng.cache.stats
+    dst, dcst = drop_eng.stats, drop_eng.cache.stats
+    print(f"arch={cfg.name} scheme={args.scheme} spill-tier demo "
+          f"({n} requests x [{s} shared + {suffix} unique] tokens over an "
+          f"evicted prefix, {backend}"
+          + (f", data_shards={hot_eng.data_shards}" if mesh else "") + ")")
+    print(f"drop mode:  prefill {dst['prefill_tokens']} tokens "
+          f"({dst['prefill_skipped_tokens']} skipped, "
+          f"{dcst['hits']}/{dcst['lookups']} lookups hit), "
+          f"wall {drop_wall*1e3:.0f}ms — the evicted prefix recomputes")
+    print(f"spill mode: prefill {st['prefill_tokens']} tokens "
+          f"({st['prefill_skipped_tokens']} skipped, "
+          f"{cst['hits']}/{cst['lookups']} lookups hit), "
+          f"wall {hot_wall*1e3:.0f}ms")
+    print(f"host tier:  {spilled} blocks spilled under pressure, "
+          f"{cst['swapped_in_blocks']} swapped back in "
+          f"({cst['swapin_s']*1e3:.1f}ms dispatch, overlapped with decode), "
+          f"{replicated + cst['replicated_blocks']} replicated to peer "
+          f"shards, {hot_eng.cache.host_bytes} bytes resident on host")
     print("sample token ids:", results[0].tokens[:12])
 
 

@@ -42,7 +42,8 @@ STAT_FLOAT_KEYS = ("prefill_s", "decode_s")
 STAT_INT_KEYS = ("prefill_tokens", "decode_tokens", "decode_steps", "ticks",
                  "admitted", "rejected", "finished", "spec_rounds",
                  "draft_tokens", "accepted_tokens", "prefill_steps",
-                 "prefill_skipped_tokens", "prefix_hits", "cancelled")
+                 "prefill_skipped_tokens", "prefix_hits", "cancelled",
+                 "handoffs")
 STAT_KEYS = STAT_FLOAT_KEYS + STAT_INT_KEYS
 
 
@@ -161,6 +162,25 @@ class Instrumentation:
             "serve_prefix_cache_inserted_blocks_total", "blocks newly cached")
         self.cache_evicted = reg.counter(
             "serve_prefix_cache_evicted_blocks_total", "cached blocks evicted")
+
+        # -- hierarchical cache tiers / disaggregation ---------------------
+        self.cache_spilled = reg.counter(
+            "serve_prefix_cache_spilled_blocks_total",
+            "evicted blocks snapshotted to the host tier instead of dropped")
+        self.cache_swapped_in = reg.counter(
+            "serve_prefix_cache_swapped_in_blocks_total",
+            "host-tier blocks copied back into device pools")
+        self.cache_swapin_hist = reg.histogram(
+            "serve_prefix_cache_swap_in_seconds",
+            "host->device swap-in dispatch time per materialize call")
+        self.cache_replicated = reg.counter(
+            "serve_prefix_cache_replicated_blocks_total",
+            "hot-prefix blocks copied into peer shards via the host tier")
+        self.host_tier_bytes = reg.gauge(
+            "serve_prefix_cache_host_bytes",
+            "bytes held by host-RAM prefix snapshots")
+        # (handoff exports ride the regular stats keys: "handoffs" in
+        # STAT_INT_KEYS -> serve_engine_handoffs_total above)
 
         # -- speculative decoding -----------------------------------------
         self.spec_accepted_hist = reg.histogram(
@@ -320,6 +340,8 @@ class Instrumentation:
         self.pool_frag_ratio.set(u["frag_ratio"])
         if eng.cache is not None:
             self.cache_nodes.set(eng.cache.cached_blocks())
+            if eng.cache.spill:
+                self.host_tier_bytes.set(eng.cache.host_bytes)
 
     # ---- pool / cache / spec events -------------------------------------
 
@@ -348,6 +370,20 @@ class Instrumentation:
     def on_cache_evict(self, blocks: int) -> None:
         if blocks:
             self.cache_evicted.inc(blocks)
+
+    def on_cache_spill(self, blocks: int, bytes_: int) -> None:
+        if blocks:
+            self.cache_spilled.inc(blocks)
+
+    def on_cache_swap_in(self, blocks: int, seconds: float) -> None:
+        if blocks:
+            self.cache_swapped_in.inc(blocks)
+            self.cache_swapin_hist.observe(seconds)
+
+    def on_cache_replicate(self, blocks: int) -> None:
+        if blocks:
+            self.cache_replicated.inc(blocks)
+
 
     # ---- exposition ------------------------------------------------------
 

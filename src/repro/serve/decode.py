@@ -8,6 +8,12 @@ shard-local block tables; see serve/README.md "Multi-host serving").
 `make_serve_step`/`greedy_generate` remain as the legacy dense-cache
 fixed-batch path (benchmarks' seed baseline, simple examples).
 
+Role-split engines (`EngineConfig.role`) reuse these builders unchanged:
+a "prefill" engine compiles only the prefill/chunk steps it runs before
+exporting a `Handoff`, a "decode" engine admits handoffs through the
+prefix cache and runs the same decode step as a monolithic engine — the
+split is pure engine-loop policy, never a third step variant.
+
 Forward quantization (RTN + 4/6) is deterministic, so serving needs no
 per-step randomness — the seed below is a fixed constant feeding the
 (unused-in-inference) backward.

@@ -47,7 +47,7 @@ from repro.configs.base import ArchConfig
 from repro.obs.instrumentation import NULL, legacy_stats_dict
 from repro.serve import decode as serve_decode
 from repro.serve import spec_decode
-from repro.serve.kv_pool import KVPool
+from repro.serve.kv_pool import KVPool, OutOfBlocks
 from repro.serve.prequant import prequantize
 from repro.serve.sampling import (SamplingParams, sample_tokens,
                                   speculative_resample)
@@ -130,6 +130,27 @@ class RequestResult:
         return self.latency_s <= self.deadline_s
 
 
+@dataclass
+class Handoff:
+    """Finished prefill leaving a prefill-role engine for a decode-role one.
+
+    Carries the ORIGINAL Request object (req_id intact — the frontend
+    bridge keeps routing streamed tokens by id across the role boundary),
+    the tokens generated so far (the first sampled token — its logits came
+    from the prompt's last position on the prefill worker), and the
+    prompt's KV as host-tier payloads: `(logical_block, payload)` pairs in
+    `KVPool.read_block_host` format. Payloads are immutable snapshots
+    (docs/CONVENTIONS.md §9); a partial tail block rides along whole —
+    bytes past `length` are stale-behind-the-position-mask, exactly like
+    any other partially filled block. bf16 payloads import bit-exactly, so
+    a disaggregated greedy stream equals the single-engine stream."""
+
+    req: Request
+    generated: list[int]
+    length: int                       # prompt tokens backed by the payloads
+    blocks: list                      # [(logical_idx, payload), ...]
+
+
 @dataclass(frozen=True)
 class EngineConfig:
     n_slots: int = 4
@@ -175,6 +196,30 @@ class EngineConfig:
     # window (pure-lattn) pools, recurrent-state archs; `engine.cache` is
     # None there.
     prefix_cache: bool = False
+    # hierarchical prefix cache (requires prefix_cache=True): eviction under
+    # pool pressure spills block bytes to a host-RAM tier instead of
+    # dropping them, and a later match swaps them back in asynchronously —
+    # a spill-hot request still skips every prefill forward over its
+    # matched prefix, bitwise-equal to cold under bf16. Also lifts the
+    # shard-affinity limit: spilled/hot prefixes become reachable from any
+    # shard via host-tier copies (serve/prefix_cache.py module docstring).
+    prefix_spill: bool = False
+    # optional cap on host-tier bytes (LRU snapshot trim); None = unbounded
+    host_budget_bytes: int | None = None
+    # proactive cross-shard replication: nodes matched this many times get
+    # their blocks copied into peer shards' pools through the host tier
+    # (bounded to one block per engine tick; free blocks only — replication
+    # never evicts). None disables; meaningless with n_shards == 1.
+    replicate_hits: int | None = None
+    # disaggregated prefill/decode (serve/frontend.py EnginePair): "both"
+    # is the classic single engine; a "prefill" worker runs admission +
+    # chunked prefill only and exports finished KV as host-tier Handoffs;
+    # a "decode" worker admits Handoffs into DECODE slots (zero prefill
+    # forwards) and runs only decode ticks — prefill chunks never steal
+    # decode ticks. Split roles require a paged pool without sliding-window
+    # reclamation or recurrent state (whole resident blocks must travel)
+    # and spec_k == 0 (the draft pool does not travel with the handoff).
+    role: str = "both"
     # scheduler policy object (serve/scheduler.py). None -> FifoPolicy,
     # which reproduces the pre-policy engine exactly; LatencyPolicy adds
     # priority/deadline admission, prefill preemption, and aging.
@@ -265,6 +310,23 @@ class ServeEngine:
         self.pool = KVPool(cfg, e.n_slots, e.max_len, paged=e.paged,
                            block_size=e.block_size, n_blocks=e.n_blocks,
                            n_shards=self.data_shards, quantized=e.kv_quant)
+        if e.role not in ("both", "prefill", "decode"):
+            raise ValueError(
+                f"role must be 'both', 'prefill' or 'decode', got {e.role!r}")
+        if e.role != "both":
+            if (not e.paged or self.pool.window is not None
+                    or self.pool.has_state_kinds):
+                raise ValueError(
+                    "disaggregated roles require a paged pool without "
+                    "sliding-window reclamation or recurrent state kinds: "
+                    "the KV handoff moves whole resident blocks")
+            if e.spec_k > 0:
+                raise ValueError(
+                    "disaggregated roles are incompatible with spec_k > 0 "
+                    "(the draft pool does not travel with the handoff)")
+        self.role = e.role
+        self.handoffs: deque[Handoff] = deque()       # prefill: exported
+        self.handoff_queue: deque[Handoff] = deque()  # decode: awaiting slot
         if self.mesh is not None:
             # commit the hot state to its serving layout up front: packed
             # weights + head over "model", cache block/slot homes over
@@ -319,10 +381,16 @@ class ServeEngine:
         # prefix_cache=False (serve/prefix_cache.py module docstring)
         self.cache = None
         self._matches: dict[int, tuple[int, Any]] = {}  # req_id -> (epoch, Match)
+        if e.prefix_spill and not e.prefix_cache:
+            raise ValueError("prefix_spill=True requires prefix_cache=True "
+                             "(the host tier is a property of the cache)")
         if e.prefix_cache:
             from repro.serve.prefix_cache import PrefixCache
             if PrefixCache.supported(self.pool):
-                self.cache = PrefixCache(self.pool)
+                self.cache = PrefixCache(
+                    self.pool, spill=e.prefix_spill,
+                    host_budget_bytes=e.host_budget_bytes,
+                    replicate_hits=e.replicate_hits, clock=self.clock)
         from repro.serve.scheduler import FifoPolicy
         self.sched = e.scheduler if e.scheduler is not None else FifoPolicy()
         # stats store: a plain dict when observability is off (the legacy
@@ -351,6 +419,18 @@ class ServeEngine:
         """Queue a request; raises QueueFull (structured: reason / queue
         depth / suggested retry_after_s) at capacity, Unservable (a
         QueueFull AND ValueError) when no pool state can ever back it."""
+        if self.role == "decode":
+            # a decode worker never prefills: plain submissions would wedge
+            # in PREFILL forever. Work arrives as Handoffs (submit_handoff);
+            # the EnginePair facade routes submits to the prefill worker.
+            self.stats["rejected"] += 1
+            exc = Unservable("decode-role engine takes Handoffs, not "
+                             "prompts (submit to the prefill worker)",
+                             reason="wrong_role",
+                             queue_depth=len(self.handoff_queue))
+            if self.obs.enabled:
+                self.obs.on_reject(request, exc.reason, self.clock())
+            raise exc
         total = len(request.prompt) + request.max_new + self._margin
         if not self.pool.can_ever_admit(total, self._max_growth):
             # reject now: an unservable request would head-of-line block the
@@ -406,6 +486,16 @@ class ServeEngine:
                 if self.obs.enabled:
                     self.obs.on_cancel(r, t, reason=reason)
                 return True
+        for h in self.handoff_queue:
+            if h.req.req_id == req_id:
+                # received but not yet admitted: the prefill worker already
+                # released its blocks at export, and this engine never
+                # allocated — dropping the host payloads reclaims everything
+                self.handoff_queue.remove(h)
+                self.stats["cancelled"] += 1
+                if self.obs.enabled:
+                    self.obs.on_cancel(h.req, t, reason=reason)
+                return True
         for i, s in enumerate(self.slots):
             if s.req is not None and s.req.req_id == req_id:
                 if self.cache is not None:
@@ -425,6 +515,14 @@ class ServeEngine:
                 return True
         return False
 
+    def submit_handoff(self, handoff: Handoff) -> None:
+        """Hand a finished prefill to this decode-role engine. The payloads
+        are host memory — nothing is allocated until `_admit` finds a slot,
+        so a queued Handoff cancels by simply dropping it."""
+        if self.role != "decode":
+            raise ValueError("submit_handoff on a non-decode-role engine")
+        self.handoff_queue.append(handoff)
+
     def suggested_retry_after_s(self) -> float:
         """Backpressure hint for rejected clients: seconds until the engine
         has plausibly worked the backlog down. Estimated as the queued +
@@ -440,7 +538,8 @@ class ServeEngine:
         return float(min(max(backlog / max(rate, 1e-9), 0.5), 60.0))
 
     def has_work(self) -> bool:
-        return bool(self.queue) or any(s.state != FREE for s in self.slots)
+        return (bool(self.queue) or bool(self.handoff_queue)
+                or any(s.state != FREE for s in self.slots))
 
     def run(self) -> list[RequestResult]:
         """Drain queue + slots; returns results in completion order."""
@@ -458,11 +557,24 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def step(self) -> list[RequestResult]:
-        """One scheduler tick: admit, one prefill chunk, one decode step."""
+        """One scheduler tick: admit, one prefill chunk, one decode step.
+
+        Role-split engines run half a tick each: a prefill worker never
+        decodes (finished prompts leave as Handoffs instead), a decode
+        worker never prefills (Handoffs admit straight into DECODE)."""
         self.stats["ticks"] += 1
         self._admit()
-        self._prefill_tick()
-        finished = self._decode_tick()
+        if self.role != "decode":
+            self._prefill_tick()
+        finished = (self._handoff_tick() if self.role == "prefill"
+                    else self._decode_tick())
+        if self.cache is not None and self.cache.spill:
+            # tick-boundary host-tier work: bounded proactive replication of
+            # hot prefixes, then fold this tick's dispatched swap-ins into
+            # the plain cached-block accounting (the writes are ordered
+            # before any dependent step read — no sync here)
+            self.cache.replicate_hot()
+            self.cache.complete_swaps()
         if self.obs.enabled:
             self.obs.on_tick(self)  # occupancy / pool / cache gauges
         return finished
@@ -474,6 +586,16 @@ class ServeEngine:
             # queue depth / aging / slack gauges — the policy object knows
             # its own urgency model, so IT reports (scheduler.py observe)
             self.sched.observe(self.obs, self.queue, self.clock())
+        if self.role == "decode":
+            # Handoffs admit FIFO straight into DECODE: the KV is already
+            # computed, so "admission" is commit + allocate + import the
+            # host payloads (zero prefill forwards on this engine)
+            while (self.handoff_queue
+                   and any(s.state == FREE for s in self.slots)):
+                if not self._try_admit_handoff(self.handoff_queue[0]):
+                    return
+                self.handoff_queue.popleft()
+            return
         if not self.queue:
             return
         now = self.clock()
@@ -483,9 +605,11 @@ class ServeEngine:
             # Matches are memoized per request against the cache EPOCH
             # (prompts are immutable; the tree only changes on
             # insert/evict), so a deferred request costs one radix walk per
-            # tree change, not one per tick
+            # tree change, not one per tick. Tiered caches weight the hint
+            # by residency (spilled tokens count half — a swap-in is far
+            # cheaper than prefill but not free; scheduler.py ordering law)
             for r in self.queue:
-                r.cached_hint = self._match(r).tokens
+                r.cached_hint = self.cache.hint_tokens(self._match(r))
         while self.queue and any(s.state == FREE for s in self.slots):
             admitted = False
             for req in self.sched.admission_order(self.queue, now):
@@ -520,7 +644,11 @@ class ServeEngine:
             mtoks, adopt, tail = m.plan(len(req.prompt) - 1,
                                         self.pool.block_size)
             if mtoks > 0:
-                plan = (mtoks, adopt, tail, m.shard)
+                # without the host tier the plan is usable only on its home
+                # shard (slot affinity); with it any shard works — spilled
+                # or off-shard blocks materialize on the placed shard
+                plan = (mtoks, adopt, tail,
+                        None if self.cache.spill else m.shard)
                 # pin BEFORE any eviction below can see these nodes unpinned
                 pinned = adopt + ([tail] if tail is not None else [])
                 self.cache.acquire(pinned)
@@ -536,17 +664,27 @@ class ServeEngine:
             if pinned:
                 self.cache.release(pinned)
             return False
+        if plan is not None and self.cache.spill:
+            # swap spilled/off-shard planned blocks onto the placed shard
+            # (dispatched host->device copies overlapping later ticks); on
+            # shortage fall back to a cold admission of the same slot
+            try:
+                self.cache.materialize(pinned, self.pool.shard_of_slot(i))
+            except OutOfBlocks:
+                self.cache.release(pinned)
+                plan = pinned = None
         self.pool.reset_slot(i)
         self.pool.commit(i, total, self._max_growth)
         prefix_len = 0
         nodes: list = []
         if plan is not None:
             mtoks, adopt, tail, _ = plan
+            sh = self.pool.shard_of_slot(i)
             if adopt:
-                self.pool.adopt_prefix(i, [n.block for n in adopt],
+                self.pool.adopt_prefix(i, [n.blocks[sh] for n in adopt],
                                        len(adopt) * self.pool.block_size)
             if tail is not None:
-                self.pool.cow_block(i, tail.block)
+                self.pool.cow_block(i, tail.blocks[sh])
                 self.cache.release([tail])  # private copy made; unpin
             self.pool.ensure(i, mtoks)
             prefix_len = mtoks
@@ -577,29 +715,54 @@ class ServeEngine:
     def _place(self, total: int, plan) -> int | None:
         """Pick a FREE slot for a request needing `total` positions.
 
-        With a prefix-cache `plan`, only the matched shard's slots can use
-        the cached blocks (slot affinity). Cold placement is shard-
-        occupancy-aware: shards are tried by free-block count (descending,
-        slot id breaking ties) instead of first-fit — single-shard pools
-        reduce to the original first-free-slot behavior exactly. When a
-        shard is short, unpinned cached prefixes on it are evicted before
-        giving up."""
+        With a prefix-cache `plan` pinned to a home shard (plan[3] set —
+        the non-spill mode), only the matched shard's slots can use the
+        cached blocks (slot affinity). A host-tier plan (plan[3] None)
+        ranks EVERY free shard by replicated-prefix availability — how many
+        planned blocks are already resident there — before effective free
+        blocks, so a replica-holding shard wins over a merely-empty one and
+        only the remainder swaps in. Cold placement is shard-occupancy-
+        aware: shards are tried by free-block count (descending, slot id
+        breaking ties) instead of first-fit — single-shard pools reduce to
+        the original first-free-slot behavior exactly. When a shard is
+        short, unpinned cached prefixes on it are evicted before giving
+        up."""
         free_by_shard: dict[int, list[int]] = {}
         for i, s in enumerate(self.slots):
             if s.state == FREE:
                 free_by_shard.setdefault(self.pool.shard_of_slot(i),
                                          []).append(i)
-        if plan is not None:
-            shards = [plan[3]] if plan[3] in free_by_shard else []
-            cached = len(plan[1])
+
+        def resident(sh):
+            n = sum(1 for node in plan[1] if sh in node.blocks)
+            if plan[2] is not None and sh in plan[2].blocks:
+                n += 1
+            return n
+
+        if plan is not None and plan[3] is not None:
+            shard_cached = {plan[3]: len(plan[1])} if plan[3] in free_by_shard \
+                else {}
+        elif plan is not None:
+            # admission credit counts only blocks ALREADY resident on the
+            # shard: the rest are swapped in from the host tier and draw on
+            # the free list exactly like a cold allocation would
+            shard_cached = {sh: sum(1 for node in plan[1]
+                                    if sh in node.blocks)
+                            for sh in free_by_shard}
         else:
+            shard_cached = {sh: 0 for sh in free_by_shard}
+        if plan is not None and plan[3] is None:
             shards = sorted(free_by_shard,
+                            key=lambda sh: (-resident(sh),
+                                            -self.pool.effective_free_blocks(sh),
+                                            sh))
+        else:
+            shards = sorted(shard_cached,
                             key=lambda sh: (-self.pool.effective_free_blocks(sh)
                                             if self.pool.paged else 0, sh))
-            cached = 0
         for sh in shards:
             i = free_by_shard[sh][0]
-            if self._admissible(i, total, cached):
+            if self._admissible(i, total, shard_cached[sh]):
                 return i
         return None
 
@@ -712,6 +875,100 @@ class ServeEngine:
             self._flush(i)
         return  # bounded work: one chunk per tick
 
+    def _retire_slot(self, i: int) -> RequestResult:
+        """Complete slot `i`: emit the result, cache the stream's blocks,
+        release pins and pool state (cache-insert-then-release ordering:
+        insertion adds the cache's own ref while the blocks are still
+        referenced; release only ever decrefs)."""
+        slot = self.slots[i]
+        res = RequestResult(
+            slot.req.req_id, list(slot.req.prompt),
+            list(slot.generated), arrival_s=slot.req.arrival_s,
+            finish_s=self.clock(),
+            deadline_s=slot.req.deadline_s)
+        if self.obs.enabled:
+            # closes the trace and surfaces queue-wait / TTFT /
+            # per-token decode latency on the result
+            self.obs.on_retire(slot.req, res, len(slot.generated),
+                               res.finish_s)
+        self._flush(i, res)
+        if self.cache is not None:
+            self.cache.insert(slot.req.prompt + slot.generated, i)
+            if slot.cache_nodes:
+                self.cache.release(slot.cache_nodes)
+        self.pool.release(i)
+        if self.draft is not None:
+            self.draft.pool.release(i)
+        self.slots[i] = _Slot()
+        self.stats["finished"] += 1
+        return res
+
+    def _handoff_tick(self) -> list[RequestResult]:
+        """Prefill-role half-tick: every slot whose prompt just finished
+        (DECODE state = prompt cached + first token sampled) leaves as a
+        Handoff — its KV snapshotted block-by-block to host payloads, its
+        prompt's full blocks inserted into this worker's prefix cache
+        (future shared prompts skip prefill HERE too), its pool state
+        released. A request its first token already completed (max_new=1)
+        retires locally; there is nothing left to decode."""
+        out: list[RequestResult] = []
+        for i, s in enumerate(self.slots):
+            if s.state != DECODE:
+                continue
+            if len(s.generated) >= s.req.max_new:
+                out.append(self._retire_slot(i))
+                continue
+            blocks = []
+            for j in range(self.pool._alloc_upto[i]):
+                blk = int(self.pool._table[i, j])
+                if blk == self.pool.sentinel:
+                    continue
+                payload, _ = self.pool.read_block_host(blk)
+                blocks.append((j, payload))
+            h = Handoff(req=s.req, generated=list(s.generated),
+                        length=s.length, blocks=blocks)
+            if self.cache is not None:
+                # only the PROMPT is cached: the first generated token was
+                # sampled but its KV was never written on this engine
+                self.cache.insert(s.req.prompt, i)
+                if s.cache_nodes:
+                    self.cache.release(s.cache_nodes)
+            self.pool.release(i)
+            self.slots[i] = _Slot()
+            self.handoffs.append(h)
+            self.stats["handoffs"] += 1
+        return out
+
+    def _try_admit_handoff(self, h: Handoff) -> bool:
+        """Import a Handoff into a FREE slot, straight into DECODE state:
+        commit, allocate the prompt's blocks, dispatch the host payload
+        writes (they overlap this tick's decode step — the next step's
+        reads are ordered after them by the cache data dependence). The
+        emitted counter starts past the handed-off tokens: the prefill
+        worker already flushed them through the token hook."""
+        req = h.req
+        total = len(req.prompt) + req.max_new + self._margin
+        i = self._place(total, None)
+        if i is None:
+            return False
+        self.pool.reset_slot(i)
+        self.pool.commit(i, total, self._max_growth)
+        try:
+            self.pool.ensure(i, h.length)
+        except OutOfBlocks:
+            self.pool.release(i)
+            return False
+        for j, payload in h.blocks:
+            self.pool.write_block_host(int(self.pool._table[i, j]), payload)
+        self.slots[i] = _Slot(state=DECODE, req=req, cursor=len(req.prompt),
+                              length=h.length, last_tok=h.generated[-1],
+                              generated=list(h.generated),
+                              emitted=len(h.generated))
+        self.stats["admitted"] += 1
+        if self.obs.enabled:
+            self.obs.on_admit(req, i, 0, self.clock())
+        return True
+
     def _decode_tick(self) -> list[RequestResult]:
         e = self.econf
         dec = [i for i, s in enumerate(self.slots) if s.state == DECODE]
@@ -719,33 +976,8 @@ class ServeEngine:
         # retire before stepping: a slot whose request is already complete
         # (max_new reached) frees its blocks for the next admission
         for i in list(dec):
-            slot = self.slots[i]
-            if len(slot.generated) >= slot.req.max_new:
-                res = RequestResult(
-                    slot.req.req_id, list(slot.req.prompt),
-                    list(slot.generated), arrival_s=slot.req.arrival_s,
-                    finish_s=self.clock(),
-                    deadline_s=slot.req.deadline_s)
-                if self.obs.enabled:
-                    # closes the trace and surfaces queue-wait / TTFT /
-                    # per-token decode latency on the result
-                    self.obs.on_retire(slot.req, res, len(slot.generated),
-                                       res.finish_s)
-                finished.append(res)
-                self._flush(i, res)
-                if self.cache is not None:
-                    # cache the completed stream's full blocks, then drop
-                    # this slot's pins — BEFORE release, while the blocks
-                    # are still referenced (insertion adds the cache's own
-                    # ref; release only ever decrefs)
-                    self.cache.insert(slot.req.prompt + slot.generated, i)
-                    if slot.cache_nodes:
-                        self.cache.release(slot.cache_nodes)
-                self.pool.release(i)
-                if self.draft is not None:
-                    self.draft.pool.release(i)
-                self.slots[i] = _Slot()
-                self.stats["finished"] += 1
+            if len(self.slots[i].generated) >= self.slots[i].req.max_new:
+                finished.append(self._retire_slot(i))
                 dec.remove(i)
         if not dec:
             return finished

@@ -64,9 +64,11 @@ import concurrent.futures
 import json
 import queue as queue_mod
 import threading
-from dataclasses import dataclass, field
+from collections.abc import MutableMapping
+from dataclasses import dataclass, field, replace
 
-from repro.serve.engine import QueueFull, Request, ServeEngine, Unservable
+from repro.serve.engine import (EngineConfig, QueueFull, Request,
+                                ServeEngine, Unservable)
 from repro.serve.sampling import SamplingParams
 
 #: StreamHandle lifecycle states (the README state diagram)
@@ -463,6 +465,196 @@ class EngineBridge:
             }
 
         return self._command(do)
+
+
+# ---------------------------------------------------------------------------
+# disaggregated prefill/decode
+# ---------------------------------------------------------------------------
+
+
+class _PairStats(MutableMapping):
+    """Merged `engine.stats` over a (prefill, decode) pair: reads SUM the
+    two engines' counters (ticks, prefill_* live on the prefill worker,
+    decode_* / finished on the decode worker — the sum is what a
+    single-engine caller expects); writes land the value on the prefill
+    view and zero the decode one, so bench reset loops (`stats[k] = 0`)
+    and absolute assignments read back unchanged."""
+
+    __slots__ = ("_p", "_d")
+
+    def __init__(self, p, d):
+        self._p = p
+        self._d = d
+
+    def __getitem__(self, k):
+        return self._p[k] + self._d[k]
+
+    def __setitem__(self, k, v):
+        self._p[k] = v
+        self._d[k] = v * 0  # 0 or 0.0, matching the key's type
+
+    def __delitem__(self, k):
+        raise TypeError("engine.stats has a fixed key set")
+
+    def __iter__(self):
+        return iter(self._p)
+
+    def __len__(self):
+        return len(self._p)
+
+    def __repr__(self):
+        return repr(dict(self))
+
+
+class EnginePair:
+    """Disaggregated prefill/decode: two role-split ServeEngines behind the
+    exact engine surface EngineBridge drives (submit / cancel / step /
+    has_work / run / stats / queue / pool / free_slots / token_hook /
+    clock / obs / suggested_retry_after_s), so the whole frontend stack —
+    bridge thread, SSE streaming, visibility timeout, drain — works over a
+    split deployment unchanged (ROADMAP item 3; this is the seam PR 8's
+    bridge left for exactly this).
+
+    One pair `step()` is one tick of EACH worker: finished prefills cross
+    the role boundary first (`prefill.handoffs` -> `decode.submit_handoff`
+    — the KV travels as immutable host payloads, docs/CONVENTIONS.md §9),
+    then the decode worker ticks, then the prefill worker. The decode
+    worker therefore never runs a prefill chunk: its per-token latency is
+    flat no matter how long the prompts streaming into the prefill worker
+    are. In-process the two engines still tick serially on the bridge
+    thread; the handoff protocol is the deployment seam (the payloads are
+    plain host bytes), not a transport.
+
+    Lifecycle guarantees the pair preserves (tests/test_frontend.py,
+    tests/test_cancel_races.py): cancel finds a request wherever it lives —
+    prefill queue/slots, the in-transit handoff deque, the decode worker's
+    handoff queue/slots — and reclaims that side's pool state, so
+    conservation holds on BOTH pools; drain (`has_work` over both workers
+    plus the in-transit deque) completes every leg before `drained` fires.
+    """
+
+    def __init__(self, prefill: ServeEngine, decode: ServeEngine):
+        if prefill.role != "prefill" or decode.role != "decode":
+            raise ValueError(
+                f"EnginePair wants roles ('prefill', 'decode'), got "
+                f"({prefill.role!r}, {decode.role!r})")
+        if prefill.clock is not decode.clock:
+            raise ValueError(
+                "role-split engines must share one clock: arrival stamps "
+                "taken on the prefill worker are compared against deadlines "
+                "and visibility timeouts on the decode side")
+        self.prefill = prefill
+        self.decode = decode
+        self.clock = prefill.clock
+        self.obs = prefill.obs
+        self._stats = _PairStats(prefill.stats, decode.stats)
+
+    # ---- the engine surface the bridge drives ----------------------------
+
+    @property
+    def stats(self):
+        return self._stats
+
+    @property
+    def queue(self):
+        """Admission queue = the prefill worker's (submits land there)."""
+        return self.prefill.queue
+
+    @property
+    def pool(self):
+        """Primary pool = the decode worker's (where live sequences sit;
+        the bridge snapshot reports its occupancy)."""
+        return self.decode.pool
+
+    @property
+    def cache(self):
+        """Prefix cache = the prefill worker's (matching happens at prompt
+        admission; the decode worker imports finished KV and never
+        matches)."""
+        return self.prefill.cache
+
+    @property
+    def free_slots(self) -> int:
+        return min(self.prefill.free_slots, self.decode.free_slots)
+
+    @property
+    def token_hook(self):
+        return self.prefill.token_hook
+
+    @token_hook.setter
+    def token_hook(self, fn) -> None:
+        # both workers flush through the same hook: the prefill worker
+        # emits each request's first token, the decode worker the rest —
+        # req_id is preserved across the handoff, so the bridge's by-id
+        # routing sees one continuous stream
+        self.prefill.token_hook = fn
+        self.decode.token_hook = fn
+
+    def submit(self, request: Request) -> int:
+        return self.prefill.submit(request)
+
+    def cancel(self, req_id: int, reason: str = "cancelled") -> bool:
+        """Cancel wherever the request currently lives. A handoff caught
+        in transit is just dropped: the prefill worker released its blocks
+        at export and the decode worker never allocated."""
+        if self.prefill.cancel(req_id, reason=reason):
+            return True
+        for h in self.prefill.handoffs:
+            if h.req.req_id == req_id:
+                self.prefill.handoffs.remove(h)
+                self.prefill.stats["cancelled"] += 1
+                if self.obs.enabled:
+                    self.obs.on_cancel(h.req, self.clock(), reason=reason)
+                return True
+        return self.decode.cancel(req_id, reason=reason)
+
+    def has_work(self) -> bool:
+        return (self.prefill.has_work() or bool(self.prefill.handoffs)
+                or self.decode.has_work())
+
+    def suggested_retry_after_s(self) -> float:
+        # the decode worker owns the generated-token backlog estimate; the
+        # prefill worker's hint is the 1.0 floor until it has decode stats
+        # (never, by construction) — max() picks the informed one
+        return max(self.prefill.suggested_retry_after_s(),
+                   self.decode.suggested_retry_after_s())
+
+    def step(self):
+        # ship finished prefills across the role boundary FIRST, so a KV
+        # handoff exported last tick admits into a decode slot this tick
+        while self.prefill.handoffs:
+            self.decode.submit_handoff(self.prefill.handoffs.popleft())
+        finished = []
+        if self.decode.has_work():
+            finished.extend(self.decode.step())
+        if self.prefill.has_work():
+            finished.extend(self.prefill.step())
+        return finished
+
+    def run(self):
+        """Drain both workers; results in completion order."""
+        out = []
+        while self.has_work():
+            out.extend(self.step())
+        return out
+
+
+def make_disagg_pair(cfg, params, econf: EngineConfig) -> EnginePair:
+    """Build a prefill/decode EnginePair from one EngineConfig.
+
+    The prefill worker takes `econf` with `role="prefill"` (it owns
+    admission, the prefix cache, and the user's obs hook); the decode
+    worker reuses the prefill worker's prequantized params (one weight
+    cache serves both — in a real split deployment each worker would hold
+    its own copy) with `role="decode"` and no prefix cache: it admits
+    Handoffs, never prompts, so it would never match. Raises the same
+    validation errors a role-split ServeEngine does (paged pool, no
+    sliding window / recurrent state / spec_k)."""
+    pe = ServeEngine(cfg, params, replace(econf, role="prefill"))
+    de = ServeEngine(cfg, pe.params, replace(
+        econf, role="decode", prequant=False, obs=None,
+        prefix_cache=False, prefix_spill=False, replicate_hits=None))
+    return EnginePair(pe, de)
 
 
 # ---------------------------------------------------------------------------

@@ -397,6 +397,8 @@ class KVPool:
         self._tables_dev = None
         self._copy_fn = None
         self._overflow_fn = None
+        self._read_block_fn = None
+        self._write_block_fn = None
         # sliding-window reclamation (pure-lattn stacks, paged mode only):
         # blocks whose newest key predates every future query's window go
         # back to the free list mid-sequence, so live blocks per slot stay
@@ -866,6 +868,88 @@ class KVPool:
             self._copy_fn = jax.jit(cp, donate_argnums=(0,))
         self.caches = self._copy_fn(self.caches, jnp.int32(src),
                                     jnp.int32(dst))
+
+    # ---- host spill tier (hierarchical prefix cache) ---------------------
+    #
+    # The prefix cache's host-RAM tier (serve/prefix_cache.py) stores
+    # evicted blocks as IMMUTABLE host snapshots of the device bytes:
+    # PackedKV pools round-trip their packed uint8 codes + scales verbatim,
+    # bf16 pools round-trip bf16 — either way host->device->host is the
+    # identity, which is what makes a spill-hot stream bitwise-equal to
+    # cold (docs/CONVENTIONS.md §9). Only the engine thread calls these.
+
+    def read_block_host(self, block: int):
+        """Snapshot every token-kind leaf's block `block` to host memory.
+
+        Returns `(payload, nbytes)`: a pytree of numpy arrays mirroring the
+        token-kind structure of `self.caches` (PackedKV stays a PackedKV of
+        uint8 arrays — packed bytes, never dequantized), plus its host
+        footprint. Synchronous (one device_get), so it is an eviction-path
+        facility, never called from compiled code."""
+        if not self.paged:
+            raise SlotError("read_block_host on a dense pool: no blocks")
+        if self._read_block_fn is None:
+            def rd(caches, b):
+                out = []
+                for stage in caches:
+                    ns = {}
+                    for lk, kinds in stage.items():
+                        tk = {k: jax.tree.map(lambda leaf: leaf[:, b], v)
+                              for k, v in kinds.items() if k in TOKEN_KINDS}
+                        if tk:
+                            ns[lk] = tk
+                    out.append(ns)
+                return out
+            self._read_block_fn = jax.jit(rd)
+        payload = jax.device_get(self._read_block_fn(self.caches,
+                                                     jnp.int32(block)))
+        nbytes = sum(a.nbytes for a in jax.tree_util.tree_leaves(payload))
+        return payload, nbytes
+
+    def write_block_host(self, block: int, payload) -> None:
+        """Write a `read_block_host` payload into device block `block`.
+
+        Dispatch-only: the jitted scatter is enqueued WITHOUT blocking, so a
+        swap-in overlaps subsequent host work (decode ticks); any later step
+        reading the pool sees the write because it consumes the rebound
+        `self.caches` pytree — XLA orders the dependency, no host sync is
+        ever needed for correctness."""
+        if not self.paged:
+            raise SlotError("write_block_host on a dense pool: no blocks")
+        if self._write_block_fn is None:
+            def wr(caches, pay, b):
+                out = []
+                for stage, ps in zip(caches, pay):
+                    ns = {}
+                    for lk, kinds in stage.items():
+                        pk = ps.get(lk, {})
+                        ns[lk] = {
+                            k: (jax.tree.map(
+                                lambda leaf, p: leaf.at[:, b].set(p), v,
+                                pk[k]) if k in TOKEN_KINDS else v)
+                            for k, v in kinds.items()}
+                    out.append(ns)
+                return out
+            self._write_block_fn = jax.jit(wr, donate_argnums=(0,))
+        self.caches = self._write_block_fn(self.caches, payload,
+                                           jnp.int32(block))
+
+    def alloc_cache_block(self, shard: int) -> int:
+        """Allocate one block on `shard` OWNED BY THE PREFIX CACHE (ref 1,
+        no slot): the target of a host-tier swap-in or a cross-shard
+        replication copy. Falls back to `evict_hook` under pressure exactly
+        like `ensure`; the caller must pin (acquire) any cache path it is
+        materializing FIRST, or the eviction could spill the very nodes the
+        swap-in is for."""
+        free = self._frees[shard]
+        if not free and not (self.evict_hook is not None
+                             and self.evict_hook(shard, 1) > 0):
+            raise OutOfBlocks(f"shard {shard}: no free block for the cache")
+        blk = free.pop()
+        self._ref[blk] = 1
+        if self.obs is not None:
+            self.obs.on_pool_alloc(1)
+        return blk
 
     def check_quant_overflow(self, vals: jax.Array) -> float:
         """Debug-mode overflow detector for the cache-quantization path.

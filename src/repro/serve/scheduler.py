@@ -30,7 +30,12 @@ outranks every fixed-priority competitor — the starvation-freedom bound
 tests/test_scheduler.py asserts. Cache-aware ordering: among otherwise
 equal requests, a larger cached prefix sorts first (it is cheaper to
 admit — its prefill is mostly skipped), which both drains the queue
-faster and reuses cached blocks before they age out.
+faster and reuses cached blocks before they age out. The hint is
+tier-aware: `PrefixCache.hint_tokens` counts device-resident tokens at
+full weight and host-spilled tokens at half (a spill-hot admission still
+skips its prefill, but pays block re-allocation and the host→device
+copy), so the ordering prefers truly-resident prefixes without treating
+spilled ones as cold.
 
 Determinism: policies are pure functions of (queue snapshot, tick
 counters, request fields); `now` is only consulted for deadline slack,

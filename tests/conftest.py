@@ -59,6 +59,13 @@ _KVQ_SUITES = {"test_kv_quant.py"}
 # the whole tier-1 run.
 _FRONTEND_SUITES = {"test_frontend.py", "test_cancel_races.py"}
 
+# Hierarchical prefix-cache suite (host-RAM spill tier, swap-in, cross-shard
+# replication, disaggregated handoff conservation): `-m tiered` selects it,
+# wired by path. Shares the frontend suites' SIGALRM wall-clock guard — the
+# fuzz walks and swap-in paths touch the same engine/pool machinery a
+# deadlock would wedge.
+_TIERED_SUITES = {"test_prefix_tiers.py"}
+
 #: per-test wall-clock ceiling for the frontend suites, seconds. Generous —
 #: normal tests finish in a few seconds even with XLA compiles; the guard
 #: exists to catch deadlocks/hangs, not slowness.
@@ -79,6 +86,9 @@ def pytest_collection_modifyitems(config, items):
             item.add_marker(pytest.mark.kvq)
         if item.fspath.basename in _FRONTEND_SUITES:
             item.add_marker(pytest.mark.frontend)
+            item.add_marker(pytest.mark.usefixtures("_frontend_timeout"))
+        if item.fspath.basename in _TIERED_SUITES:
+            item.add_marker(pytest.mark.tiered)
             item.add_marker(pytest.mark.usefixtures("_frontend_timeout"))
 
 

@@ -24,6 +24,7 @@ from repro.configs import registry
 from repro.models import lm
 from repro.serve.engine import DECODE, PREFILL, EngineConfig, Request, \
     ServeEngine
+from repro.serve.frontend import make_disagg_pair
 
 pytestmark = pytest.mark.serve
 
@@ -236,6 +237,78 @@ def test_cancel_after_retirement_is_noop(cfg, params):
     assert not eng.cancel(rid)  # already retired: False, no state change
     assert eng.stats["cancelled"] == 0
     _assert_conserved(eng)
+
+
+def _pair(cfg, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("prefix_cache", True)
+    kw.setdefault("scheme", "bf16")
+    kw.setdefault("prequant", False)
+    kw.setdefault("clock", FakeClock())
+    return make_disagg_pair(cfg, params, EngineConfig(**kw))
+
+
+def _pair_conserved(pair):
+    """Both engines' pools fully reclaimed: prefill blocks are free or
+    prefix-cached, decode blocks (no cache on the decode worker) all free."""
+    pe, de = pair.prefill, pair.decode
+    held = pe.cache.cached_blocks() if pe.cache is not None else 0
+    assert pe.pool.free_block_count + held == pe.pool.n_blocks
+    assert de.pool.free_block_count == de.pool.n_blocks
+
+
+# --------------------------------------------------------------------------
+# disaggregation races: cancel landing around the prefill->decode handoff
+# --------------------------------------------------------------------------
+
+
+def test_cancel_in_transit_handoff_reclaims_both_engines(cfg, params):
+    """cancel() landing while the finished prefill sits in the in-transit
+    deque — after the prefill worker retired the slot, before the decode
+    worker admitted the Handoff. The pair must drop it there: the decode
+    worker never sees the request, both pools conserve, and the prompt
+    prefix the cancelled request paid for stays cached for the next hit."""
+    pair = _pair(cfg, params)
+    rid = pair.submit(Request(prompt=_prompt(cfg), max_new=8))
+    while not pair.prefill.handoffs:
+        pair.prefill.step()     # drive ONLY the prefill worker: the export
+    assert pair.cancel(rid)     # ...parks in transit, and dies there
+    assert pair.stats["cancelled"] == 1
+    assert not pair.has_work()
+    assert pair.decode.stats["finished"] == 0
+    assert pair.decode.free_slots == pair.decode.pool.n_slots
+    _pair_conserved(pair)
+    # resubmission hot-hits the cancelled request's exported prompt prefix
+    rid2 = pair.submit(Request(prompt=_prompt(cfg), max_new=4))
+    res = {r.req_id: r for r in pair.run()}
+    assert len(res[rid2].tokens) == 4
+    assert pair.prefill.stats["prefix_hits"] >= 1
+    assert pair.stats["prefill_skipped_tokens"] > 0
+    _pair_conserved(pair)
+
+
+def test_cancel_mid_decode_on_decode_worker(cfg, params):
+    """cancel() after the handoff landed: the pair routes it through the
+    DECODE worker (the prefill worker no longer knows the id). Its slot and
+    blocks come back, and both engines keep serving."""
+    pair = _pair(cfg, params)
+    rid = pair.submit(Request(prompt=_prompt(cfg), max_new=8))
+    while True:                 # step the PAIR until decode is mid-stream
+        pair.step()
+        i = _slot_of(pair.decode, rid)
+        if i is not None and len(pair.decode.slots[i].generated) >= 2:
+            break
+    assert pair.cancel(rid)
+    assert pair.decode.stats["cancelled"] == 1
+    assert pair.prefill.stats["cancelled"] == 0
+    assert not pair.has_work()
+    _pair_conserved(pair)
+    rid2 = pair.submit(Request(prompt=_prompt(cfg, n=9, seed=2), max_new=3))
+    res = {r.req_id: r for r in pair.run()}
+    assert len(res[rid2].tokens) == 3
+    _pair_conserved(pair)
 
 
 def test_cancel_storm_conserves_pool(cfg, params):

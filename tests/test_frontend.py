@@ -33,7 +33,7 @@ from repro.serve.engine import (EngineConfig, QueueFull, Request,
                                 ServeEngine, Unservable)
 from repro.serve.frontend import (H_REQUEUED, H_RETIRED, CompletionFrontend,
                                   EngineBridge, FrontendConfig, TenantQuota,
-                                  _TokenBucket)
+                                  _TokenBucket, make_disagg_pair)
 
 pytestmark = pytest.mark.serve
 
@@ -628,3 +628,125 @@ def test_token_hook_streams_every_token_in_order(cfg, params):
 def test_token_hook_off_by_default(cfg, params):
     eng = _engine(cfg, params)
     assert eng.token_hook is None  # zero-overhead when unused
+
+
+# --------------------------------------------------------------------------
+# disaggregated prefill/decode behind the same bridge (hierarchical-cache PR)
+# --------------------------------------------------------------------------
+
+
+def _disagg(cfg, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("scheme", "bf16")
+    kw.setdefault("prequant", False)
+    return make_disagg_pair(cfg, params, EngineConfig(**kw))
+
+
+def _bf16_reference(cfg, params, prompts, max_new):
+    eng = _engine(cfg, params, scheme="bf16", prequant=False)
+    ids = [eng.submit(Request(prompt=list(p), max_new=max_new))
+           for p in prompts]
+    res = {r.req_id: r.tokens for r in eng.run()}
+    return [res[i] for i in ids]
+
+
+def test_sse_stream_over_disagg_pair_bitwise(cfg, params):
+    """An EnginePair rides the SAME bridge seam as a single engine (submit /
+    step / cancel / token_hook duck-typing): SSE streams over the role-split
+    deployment stay bitwise equal to the monolithic bf16 engine, with the
+    roles really split (no decode steps on the prefill worker, no prefill
+    forwards on the decode worker)."""
+    prompts = _prompts(cfg)
+    ref = _bf16_reference(cfg, params, prompts, max_new=8)
+    pair = _disagg(cfg, params)
+
+    async def scenario():
+        async with _Serve(pair) as srv:
+            res = await asyncio.gather(
+                *[_sse_client(srv.port, p, 8) for p in prompts])
+            snap = await srv.snapshot()
+            return res, snap
+
+    res, snap = asyncio.run(scenario())
+    assert all(status == 200 and done for status, _, done in res)
+    assert [toks for _, toks, _ in res] == ref
+    assert snap["stats"]["finished"] == len(prompts)   # merged pair stats
+    assert pair.prefill.stats["decode_steps"] == 0
+    assert pair.decode.stats["prefill_steps"] == 0
+    assert pair.prefill.stats["handoffs"] == len(prompts)
+
+
+def test_disconnect_on_disagg_pair_reclaims_both_pools(cfg, params):
+    """A client killed mid-stream on a role-split deployment: the cancel
+    reclaims whichever engine holds the request, BOTH pools conserve, and
+    the exported prompt prefix still hot-hits the follow-up."""
+    prompts = _prompts(cfg, lens=(24,))
+    ref = _bf16_reference(cfg, params, prompts, max_new=8)
+    pair = _disagg(cfg, params, prefix_cache=True)
+
+    async def scenario():
+        async with _Serve(pair) as srv:
+            status, toks, done = await _sse_client(
+                srv.port, prompts[0], 8, kill_after=2)
+            assert status == 200 and not done and len(toks) >= 2
+            for _ in range(200):
+                snap = await srv.snapshot()
+                if snap["stats"]["cancelled"] == 1:
+                    break
+                await asyncio.sleep(0.02)
+            snap = await srv.snapshot()
+            assert snap["stats"]["cancelled"] == 1
+            assert snap["live_handles"] == 0
+            books = await asyncio.wrap_future(srv.bridge.call(lambda e: (
+                e.prefill.pool.free_block_count,
+                e.prefill.cache.cached_blocks(),
+                e.prefill.pool.n_blocks,
+                e.decode.pool.free_block_count,
+                e.decode.pool.n_blocks)))
+            pf, pheld, ptotal, df, dtotal = books
+            assert pf + pheld == ptotal     # prefill worker: free + cached
+            assert df == dtotal             # decode worker: all free
+            status2, toks2, done2 = await _sse_client(srv.port, prompts[0], 8)
+            return toks2, done2
+
+    toks2, done2 = asyncio.run(scenario())
+    assert done2 and toks2 == ref[0]
+    assert pair.prefill.stats["prefix_hits"] >= 1
+
+
+def test_drain_covers_both_roles(cfg, params):
+    """/admin/drain on a role-split deployment: in-flight requests cross the
+    handoff boundary and run to completion on the decode worker (drained
+    fires only once BOTH engines and the in-transit deque are empty); new
+    arrivals get 503 meanwhile."""
+    prompts = _prompts(cfg, lens=(9, 13))
+    ref = _bf16_reference(cfg, params, prompts, max_new=8)
+    pair = _disagg(cfg, params)
+
+    async def scenario():
+        async with _Serve(pair) as srv:
+            b = srv.bridge
+            handles = [
+                await asyncio.wrap_future(b.submit(p, 8,
+                                                   track_visibility=False))
+                for p in prompts]
+            while not any(h.tokens for h in handles):
+                await asyncio.sleep(0.01)
+            status, body, _ = await _post(srv.port, "/admin/drain", {})
+            assert status == 202 and body["draining"] is True
+            st2, body2, _ = await _post(
+                srv.port, "/v1/completions",
+                {"prompt": prompts[0], "max_tokens": 4, "stream": False})
+            assert st2 == 503 and body2["error"]["reason"] == "draining"
+            while not b.drained.is_set():
+                await asyncio.sleep(0.01)
+            assert all(h.done and h.state == H_RETIRED for h in handles)
+            return [h.tokens for h in handles]
+
+    toks = asyncio.run(scenario())
+    assert toks == ref                      # drain never truncated a stream
+    assert not pair.has_work()
+    assert not pair.prefill.handoffs        # nothing left in transit
+    assert pair.decode.pool.free_block_count == pair.decode.pool.n_blocks

@@ -281,6 +281,45 @@ def test_sharded_prefix_unreachable_from_other_shard():
 
 
 @needs_two_devices
+def test_sharded_prefix_spill_hot_across_shards():
+    """The spill tier lifts the slot-affinity reuse limit the test above
+    pins: with `prefix_spill=True` the same blocked resubmission admits HOT
+    on shard 1 — the matched path is sideloaded through the host tier
+    (snapshot of the shard-0 copies, dispatch-written into shard-1 blocks),
+    the prefix prefill is skipped AGAIN, and the stream stays bitwise equal.
+    Slot affinity still holds for every owned block."""
+    cfg = _gqa_cfg()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(3)
+    prompt = list(map(int, rng.randint(0, cfg.vocab, 20)))
+    mesh = make_serve_mesh(2, 1)
+    eng = ServeEngine(cfg, params, EngineConfig(
+        n_slots=2, max_len=64, block_size=4, prefill_chunk=8,
+        scheme="bf16", prequant=False, mesh=mesh, prefix_cache=True,
+        prefix_spill=True))
+    eng.submit(Request(prompt=prompt, max_new=3))
+    ref = [r.tokens for r in eng.run()][0]      # cached on shard 0
+    skipped0 = eng.stats["prefill_skipped_tokens"]
+    blocker = eng.submit(Request(prompt=prompt, max_new=12))
+    shared = eng.submit(Request(prompt=prompt, max_new=3))
+    eng.step()  # blocker admitted to slot 0 (shard 0, prefix reuse)...
+    res = {r.req_id: r.tokens for r in eng.run()}
+    assert res[shared] == ref                   # bitwise, now HOT cross-shard
+    # BOTH the blocker and the cross-shard request skipped the 19-token
+    # prefix (contrast: +19 once without spill, test above)
+    assert eng.stats["prefill_skipped_tokens"] == skipped0 + 19 + 19
+    assert eng.cache.stats["swapped_in_blocks"] >= 4   # sideloaded path
+    pool = eng.pool
+    bps = pool.blocks_per_shard
+    for slot in range(pool.n_slots):
+        assert all(b // bps == pool.shard_of_slot(slot)
+                   for b in pool._owned[slot])
+    assert (pool.free_block_count
+            + sum(1 for b in range(pool.n_blocks) if pool.refcount(b) > 0)
+            == pool.n_blocks)
+
+
+@needs_two_devices
 def test_shard_occupancy_aware_placement():
     """_admit places a new request on the shard with the most EFFECTIVE free
     blocks (free minus outstanding commitments), not the first free slot:
